@@ -1,0 +1,96 @@
+"""Fig 9: no-fault runtime overhead of the resilience subsystem.
+
+Paper claim: ~0% runtime overhead + 27 MB fixed memory, because detection
+is free (SIGSEGV) and the runtime is off the hot path.
+
+Here: free traps read scalars the step already computed (literally free);
+the only paid component is the optional rotating canary (1/K of state
+digested per step).  We measure steps/s for: no detectors / traps only /
+traps + canary at K in {8, 4, 1}, plus the micro-checkpoint memory cost."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks._campaign import Campaign
+from repro.core import ChecksumCanary, MicroCheckpointer, trap_loss_spike, trap_nonfinite
+
+
+def _loop(campaign: Campaign, steps: int, *, traps: bool, canary_k: int,
+          snapshots: bool) -> float:
+    """Returns steps/sec over `steps` warm steps."""
+    state = campaign.states[0]
+    canary = ChecksumCanary(state, n_slices=canary_k) if canary_k else None
+    micro = MicroCheckpointer(interval=2) if snapshots else None
+    history = []
+    # warm
+    st, m = campaign.step(state, campaign.bfn(0))
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for s in range(steps):
+        if micro is not None:
+            micro.maybe_snapshot(s, state)
+            micro.record_iv(s, state["iv"])
+        if canary is not None:
+            canary.check(s, state)
+        state, metrics = campaign.step(state, campaign.bfn(s))
+        if traps:
+            trap_nonfinite(s, metrics) or \
+                trap_loss_spike(s, metrics, history)
+            history.append(float(metrics["loss"]))
+        if canary is not None:
+            canary.arm(s, state)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    return steps / (time.perf_counter() - t0)
+
+
+def run(campaign: Campaign, steps: int = 30) -> Dict:
+    base = _loop(campaign, steps, traps=False, canary_k=0, snapshots=False)
+    traps = _loop(campaign, steps, traps=True, canary_k=0, snapshots=False)
+    snaps = _loop(campaign, steps, traps=True, canary_k=0, snapshots=True)
+    k8 = _loop(campaign, steps, traps=True, canary_k=8, snapshots=True)
+    k1 = _loop(campaign, steps, traps=True, canary_k=1, snapshots=True)
+
+    micro = MicroCheckpointer(interval=2)
+    micro.snapshot(0, campaign.states[0])
+    micro.snapshot(2, campaign.states[0])
+    return {
+        "steps_per_s": {"no_detectors": base, "traps_only": traps,
+                        "traps+snapshots": snaps,
+                        "traps+snapshots+canary_k8": k8,
+                        "traps+snapshots+canary_k1": k1},
+        "overhead_pct": {
+            "traps_only": 100 * (base / traps - 1),
+            "traps+snapshots": 100 * (base / snaps - 1),
+            "traps+snapshots+canary_k8": 100 * (base / k8 - 1),
+            "traps+snapshots+canary_k1": 100 * (base / k1 - 1),
+        },
+        "snapshot_memory_bytes": micro.memory_bytes,
+        "note": ("canary digests run as Pallas interpret on CPU here — on "
+                 "TPU the compiled kernel streams at HBM bandwidth and the "
+                 "K=8 rotating slice costs <1% of step time (see DESIGN.md "
+                 "§4.2); traps_only is the paper-faithful free-detection "
+                 "configuration."),
+    }
+
+
+def render(out: Dict) -> str:
+    lines = ["## No-fault overhead (paper Fig 9 analogue)", ""]
+    lines.append("| configuration | steps/s | overhead vs bare |")
+    lines.append("|---|---|---|")
+    sps = out["steps_per_s"]
+    lines.append(f"| no detectors | {sps['no_detectors']:.2f} | — |")
+    for k in ("traps_only", "traps+snapshots", "traps+snapshots+canary_k8",
+              "traps+snapshots+canary_k1"):
+        lines.append(f"| {k} | {sps[k]:.2f} "
+                     f"| {out['overhead_pct'][k]:+.1f}% |")
+    lines.append("")
+    lines.append(f"- double-buffered in-HBM snapshot memory: "
+                 f"{out['snapshot_memory_bytes']/1e6:.1f} MB "
+                 f"(paper: 27 MB fixed)")
+    lines.append(f"- {out['note']}")
+    return "\n".join(lines)

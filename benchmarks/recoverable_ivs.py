@@ -1,0 +1,37 @@
+"""Table 6: number of recoverable induction variables, original (no ICP)
+vs IterPro-transformed, across the assigned architectures' training loops."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import get_config, list_archs
+from repro.core.icp import recoverable_iv_count
+
+
+def run() -> Dict:
+    rows = {}
+    for arch in list_archs():
+        cfg = get_config(arch)
+        orig = recoverable_iv_count(cfg, 256, icp_enabled=False)
+        ours = recoverable_iv_count(cfg, 256, icp_enabled=True)
+        rows[arch] = {"original": orig, "iterpro": ours}
+    return rows
+
+
+def render(out: Dict) -> str:
+    lines = ["## Recoverable induction variables (paper Table 6 analogue)",
+             "",
+             "| arch (training loop) | original | IterPro (ICP) | gain |",
+             "|---|---|---|---|"]
+    for arch, r in out.items():
+        gain = "BIG" if r["original"] == 0 else \
+            f"{100 * (r['iterpro'] / r['original'] - 1):.0f}%"
+        lines.append(f"| {arch} | {r['original']} | {r['iterpro']} "
+                     f"| {gain} |")
+    lines.append("")
+    lines.append("Without ICP the loop carries ONE counter (`step`) and "
+                 "derives the rest — corruption has no partner to recover "
+                 "from (0 recoverable, the paper's EP/IS 'BIG' rows). ICP "
+                 "promotes every derived counter to independent state.")
+    return "\n".join(lines)

@@ -1,0 +1,78 @@
+"""Figs 7, 8 and 10: recovery rate, recovery time and the CARE-vs-IterPro
+ablation (the value of induction-variable recovery), plus the beyond-paper
+canary ablation."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks._campaign import Campaign, summarize
+
+
+def run(campaign: Campaign, n_trials: int = 100, seed: int = 23) -> Dict:
+    # Detection held constant (canary) so the RECOVERY POLICIES compare on
+    # the same detected-fault population; same seed -> identical injections.
+    care = summarize(campaign.run(n_trials, mode="care", seed=seed,
+                                  use_canary=True, canary_slices=4))
+    iterpro = summarize(campaign.run(n_trials, mode="iterpro", seed=seed,
+                                     use_canary=True, canary_slices=4))
+    # paper-faithful traps-only row (the free-detection regime)
+    traps = summarize(campaign.run(n_trials, mode="iterpro", seed=seed))
+    # IV-targeted campaign: the paper's Fig-10 gap lives in loop state.
+    care_iv = summarize(campaign.run(max(20, n_trials // 3), mode="care",
+                                     target="iv", seed=seed + 1,
+                                     use_canary=True, canary_slices=1))
+    iterpro_iv = summarize(campaign.run(max(20, n_trials // 3),
+                                        mode="iterpro", target="iv",
+                                        seed=seed + 1,
+                                        use_canary=True, canary_slices=1))
+    return {"care": care, "iterpro": iterpro, "traps_only": traps,
+            "care_iv": care_iv, "iterpro_iv": iterpro_iv,
+            "n_trials": n_trials}
+
+
+def _pct(x) -> str:
+    return "n/a" if x is None else f"{100 * x:.1f}%"
+
+
+def _ms(x) -> str:
+    return "n/a" if x is None else f"{x:.1f}"
+
+
+def render(out: Dict) -> str:
+    lines = ["## Recovery (paper Figs 7, 8, 10 analogue)", ""]
+    lines.append("| system | crashes | recovered | in-HBM rate | incl. C/R "
+                 "| exact | p50 ms | mean steps replayed |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for name, s in (("traps-only detection (paper regime)",
+                     out["traps_only"]),
+                    ("CARE policy (SC'19: no IV recovery)", out["care"]),
+                    ("IterPro policy (full ladder)", out["iterpro"])):
+        lines.append(
+            f"| {name} | {s['crashes']} | {s['recovered']} "
+            f"| {_pct(s['iterpro_rate'])} | {_pct(s['recovery_rate'])} "
+            f"| {_pct(s['exact_rate'])} | {_ms(s['p50_recovery_ms'])} "
+            f"| {s['mean_steps_replayed'] if s['mean_steps_replayed'] is not None else 'n/a'} |")
+    lines.append("")
+    lines.append("Paper: IterPro 83.55% avg recovery of SIGSEGV faults vs "
+                 "CARE 57.64%; dozens of ms per recovery.")
+    lines.append("")
+    lines.append("### Induction-variable faults only (Fig 10's gap)")
+    lines.append("| system | crashes | recovered | rate |")
+    lines.append("|---|---|---|---|")
+    for name, s in (("CARE", out["care_iv"]),
+                    ("IterPro", out["iterpro_iv"])):
+        lines.append(f"| {name} | {s['crashes']} | {s['recovered']} "
+                     f"| {_pct(s['recovery_rate'])} |")
+    lines.append("")
+    lines.append("### Recovery-time breakdown (Fig 8)")
+    rec = out["iterpro"]
+    lines.append(f"- p50 recovery: {_ms(rec['p50_recovery_ms'])} ms; "
+                 f"mean: {_ms(rec['mean_recovery_ms'])} ms")
+    lines.append(f"- by rung: {rec['by_rung']}")
+    lines.append("- (paper: >98% of recovery time is diagnosis/load, not "
+                 "the kernel itself — here the analogous split is "
+                 "snapshot-verify + device-put vs the replayed steps)")
+    return "\n".join(lines)

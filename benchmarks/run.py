@@ -1,0 +1,105 @@
+"""Benchmark runner — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--trials N] [--quick] [--skip-roofline]
+
+Writes benchmarks/results.json and prints the rendered tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (np.floating, np.integer)):
+        return float(x)
+    return x
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=60)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "results.json"))
+    args = ap.parse_args()
+    n = 16 if args.quick else args.trials
+
+    from benchmarks import injection_outcomes, overhead, recoverable_ivs, recovery, roofline
+    from benchmarks._campaign import Campaign
+
+    t0 = time.time()
+    print("=" * 72)
+    print("IterPro-JAX benchmark suite — one section per paper table/figure")
+    print(f"(fault-injection trials per campaign: {n}; paper used 5-10k "
+          f"per workload on a 48-core x86 box)")
+    print("=" * 72, flush=True)
+
+    print("\n[1/6] building campaign (fault-free reference trajectory)...",
+          flush=True)
+    campaign = Campaign()
+
+    results = {}
+
+    print("[2/6] injection outcomes (Tables 3-5)...", flush=True)
+    out1 = injection_outcomes.run(campaign, n_trials=n)
+    results["injection_outcomes"] = {k: v for k, v in out1.items()
+                                     if not k.startswith("_")}
+    print()
+    print(injection_outcomes.render(out1))
+
+    print("\n[3/6] recovery rate/time + CARE ablation (Figs 7, 8, 10)...",
+          flush=True)
+    out2 = recovery.run(campaign, n_trials=n)
+    results["recovery"] = out2
+    print()
+    print(recovery.render(out2))
+
+    print("\n[4/6] no-fault overhead (Fig 9)...", flush=True)
+    out3 = overhead.run(campaign, steps=10 if args.quick else 30)
+    results["overhead"] = out3
+    print()
+    print(overhead.render(out3))
+
+    print("\n[5/6] recoverable IVs (Table 6)...", flush=True)
+    out4 = recoverable_ivs.run()
+    results["recoverable_ivs"] = out4
+    print()
+    print(recoverable_ivs.render(out4))
+
+    print("\n[6/6] downtime per fault (title claim)...", flush=True)
+    from benchmarks import downtime
+    out6 = downtime.run(campaign)
+    results["downtime"] = out6
+    print()
+    print(downtime.render(out6))
+
+    if not args.skip_roofline:
+        try:
+            out5 = roofline.run()
+            print()
+            print(roofline.render(out5, mesh="single"))
+            print()
+            print(roofline.render(out5, mesh="multi"))
+            results["roofline_cells"] = len(out5["cells"])
+        except FileNotFoundError:
+            print("\n(no dryrun_results.json — run the dry-run sweep first)")
+
+    with open(args.out, "w") as f:
+        json.dump(_jsonable(results), f, indent=1)
+    print(f"\nwrote {args.out}  ({time.time() - t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Quickstart: build a model, train a few steps, survive a fault.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the public API end to end in under a minute on CPU:
+  1. pick an architecture config (any of the 10 assigned + iterpro-100m);
+  2. one jitted train step on synthetic data;
+  3. flip one bit in the state (simulated transient error);
+  4. detect it with the checksum canary and repair it with the recovery
+     ladder — then verify the repair is bit-exact.
+"""
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import (ChecksumCanary, MicroCheckpointer, RecoveryRuntime,
+                        inject, promote, sample_plan)
+from repro.data.pipeline import TokenPipeline
+from repro.train.loop import make_train_state, make_train_step
+
+
+def main():
+    print("assigned architectures:", ", ".join(list_archs()))
+    cfg = get_config("iterpro-100m").smoke()   # CPU-sized reduced config
+    B, S = 4, 64
+
+    # --- substrate: data, state, step -----------------------------------
+    pipe = TokenPipeline(cfg.model.vocab_size, S, B, seed=0)
+    state = make_train_state(cfg, jax.random.PRNGKey(0), global_batch=B)
+    step = jax.jit(make_train_step(cfg, global_batch=B))
+
+    # --- resilience: snapshots + canary + runtime ------------------------
+    micro = MicroCheckpointer(interval=2)
+    runtime = RecoveryRuntime(step_fn=step, batch_fn=pipe.batch_at,
+                              iv_registry=promote(cfg, B), micro=micro)
+
+    for s in range(6):
+        micro.maybe_snapshot(s, state)
+        micro.record_iv(s, state["iv"])
+        state, metrics = step(state, pipe.batch_at(s))
+        print(f"step {s}: loss {float(metrics['loss']):.4f}")
+
+    canary = ChecksumCanary(state, n_slices=1)
+
+    # --- a transient error strikes --------------------------------------
+    plan = dataclasses.replace(
+        sample_plan(random.Random(1), state, 1, target="params"), bit=30)
+    corrupted = inject(state, plan)
+    print(f"\ninjected bit-flip: params/{plan.leaf} bit {plan.bit}")
+
+    report = canary.check(6, corrupted)
+    print(f"canary: {report}")
+
+    repaired, event = runtime.recover(corrupted, report, 6)
+    print(f"recovered via '{event.rung}' in {event.wall_seconds*1e3:.1f} ms "
+          f"({event.steps_replayed} steps replayed)")
+
+    exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree_util.tree_leaves(state),
+                                jax.tree_util.tree_leaves(repaired)))
+    print("repair bit-exact:", exact)
+    assert exact
+
+
+if __name__ == "__main__":
+    main()

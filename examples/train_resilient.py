@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps while
+an adversary injects transient faults — the loss keeps improving because
+every fault is recovered with near-zero downtime.
+
+CPU demo (reduced model, ~2 min):
+    PYTHONPATH=src python examples/train_resilient.py
+
+Full 100M config (the real target; slow on CPU, native on TPU):
+    PYTHONPATH=src python examples/train_resilient.py --full --steps 300
+
+Any assigned architecture works: --arch zamba2-7b (reduced automatically
+unless --full).
+"""
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="iterpro-100m")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (unreduced) config")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--inject", type=int, default=25,
+                    help="inject one bit-flip every N steps")
+    ap.add_argument("--ckpt-dir", default="/tmp/iterpro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.smoke()
+
+    out = train(cfg,
+                steps=args.steps,
+                global_batch=args.batch,
+                seq_len=args.seq,
+                snapshot_interval=8,
+                checkpoint_dir=args.ckpt_dir,
+                checkpoint_interval=50,
+                inject_every=args.inject,
+                canary_slices=4,
+                verbose=True)
+
+    print("\n=== run report ===")
+    print(json.dumps(out, indent=1))
+    losses = out.get("final_loss")
+    print(f"\ntrained {out['steps']} steps; "
+          f"{out['faults_injected']} faults injected, "
+          f"{out['faults_recovered']} recovered; final loss {losses}")
+
+
+if __name__ == "__main__":
+    main()

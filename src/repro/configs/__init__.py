@@ -1,0 +1,64 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Every assigned architecture plus the paper-representative workload.  Smoke
+variants are derived with ``get_config(id).smoke()``.
+"""
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ArchConfig,
+    ModelConfig,
+    ShapeSpec,
+    ShardingPlan,
+    TrainPlan,
+)
+
+from repro.configs.xlstm_350m import CONFIG as _XLSTM_350M
+from repro.configs.command_r_35b import CONFIG as _COMMAND_R_35B
+from repro.configs.h2o_danube_1_8b import CONFIG as _H2O_DANUBE_18B
+from repro.configs.gemma3_1b import CONFIG as _GEMMA3_1B
+from repro.configs.gemma3_27b import CONFIG as _GEMMA3_27B
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _SEAMLESS_M4T
+from repro.configs.qwen2_vl_7b import CONFIG as _QWEN2_VL_7B
+from repro.configs.zamba2_7b import CONFIG as _ZAMBA2_7B
+from repro.configs.grok_1_314b import CONFIG as _GROK_1_314B
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _KIMI_K2
+from repro.configs.iterpro_100m import CONFIG as _ITERPRO_100M
+
+_REGISTRY = {
+    c.arch_id: c
+    for c in (
+        _XLSTM_350M,
+        _COMMAND_R_35B,
+        _H2O_DANUBE_18B,
+        _GEMMA3_1B,
+        _GEMMA3_27B,
+        _SEAMLESS_M4T,
+        _QWEN2_VL_7B,
+        _ZAMBA2_7B,
+        _GROK_1_314B,
+        _KIMI_K2,
+        _ITERPRO_100M,
+    )
+}
+
+ASSIGNED_ARCHS = tuple(a for a in _REGISTRY if a != "iterpro-100m")
+
+
+def list_archs(include_paper: bool = True):
+    return tuple(_REGISTRY) if include_paper else ASSIGNED_ARCHS
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id.endswith("-smoke"):
+        return _REGISTRY[arch_id[: -len("-smoke")]].smoke()
+    return _REGISTRY[arch_id]
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES_BY_NAME[name]

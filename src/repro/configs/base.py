@@ -1,0 +1,235 @@
+"""Configuration system for the IterPro-JAX framework.
+
+Every assigned architecture is described by an :class:`ArchConfig` — a frozen
+dataclass bundling the model hyper-parameters, the sharding plan and the
+training plan.  Configs are *data*, not code: the model zoo consumes them, the
+launcher selects them with ``--arch <id>`` and the dry-run iterates the
+registry.
+
+Shape sets (assigned per the task spec) live here too: each architecture is
+paired with the four LM shapes; applicability rules (``long_500k`` requires
+sub-quadratic attention, encoder-only models have no decode) are encoded as
+config predicates rather than ad-hoc launcher logic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (seq_len, global_batch) workload cell.
+
+    ``kind`` selects which program is lowered:
+      * ``train``   -> train_step   (fwd+bwd+optimizer update)
+      * ``prefill`` -> prefill_step (fwd, build KV/state cache)
+      * ``decode``  -> serve_step   (one new token against a seq_len cache)
+    """
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    def __post_init__(self):
+        assert self.kind in ("train", "prefill", "decode"), self.kind
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Model hyper-parameters
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (family-discriminated)."""
+
+    family: str  # 'dense' | 'moe' | 'ssm' | 'hybrid' | 'encdec' | 'vlm'
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # --- attention options -------------------------------------------------
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0        # 0 -> full attention on every layer
+    local_window: int = 0          # window used by 'local' layers in a mix
+    local_global_ratio: int = 0    # e.g. 5 -> 5 local layers per 1 global
+    logit_softcap: float = 0.0     # gemma-style final-logit soft capping
+    attn_softcap: float = 0.0      # gemma-style attention-logit soft capping
+    qk_norm: bool = False
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    m_rope: bool = False           # Qwen2-VL multimodal RoPE
+    max_position: int = 131_072
+    sandwich_norm: bool = False    # gemma3 pre+post norms around attn/ffn
+    parallel_block: bool = False   # command-r parallel attn+ffn blocks
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0      # kimi-style always-on shared expert
+    moe_d_ff: int = 0              # per-expert hidden dim (0 -> d_ff)
+    moe_impl: str = "tp_ragged"    # 'tp_ragged' | 'ep_a2a'
+    moe_capacity: float = 1.25     # GShard capacity factor (dispatch slack)
+    first_dense_layers: int = 0    # kimi: first layer(s) stay dense
+
+    # --- SSM / recurrent ---------------------------------------------------
+    ssm_state: int = 0             # mamba2 state dim
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_heads: int = 0
+    mlstm_ratio: int = 0           # xLSTM: m mLSTM blocks per 1 sLSTM block
+    hybrid_ratio: int = 0          # zamba: ssm blocks per 1 (shared) attn block
+    shared_attn: bool = False      # zamba2 shared attention block + per-use LoRA
+    shared_attn_lora_rank: int = 0
+
+    # --- encoder-decoder ---------------------------------------------------
+    n_enc_layers: int = 0          # >0 -> enc-dec; n_layers is the decoder depth
+    frontend_dim: int = 0          # stubbed modality frontend embedding width
+
+    # --- vlm ---------------------------------------------------------------
+    patch_dim: int = 0             # stubbed patch-embedding width
+
+    # --- numerics ----------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when a 500k-token decode has bounded (non-full) attention
+        state on every full-attention layer, or no attention at all."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.sliding_window > 0:
+            return True  # SWA on every layer
+        if self.local_global_ratio > 0:
+            # local:global mixes are treated as sub-quadratic (gemma3): local
+            # layers bound their KV; the rare global layers decode linearly
+            # against an SP-sharded KV cache.
+            return True
+        return False
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs are decoders or enc-dec
+
+
+# ---------------------------------------------------------------------------
+# Sharding / training plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """How this architecture maps onto the (pod, data, model) mesh."""
+
+    fsdp: bool = False             # ZeRO-3 shard params+opt over 'data'
+    tensor_parallel: bool = True   # TP over 'model'
+    expert_parallel: bool = False  # EP (a2a) over 'model' for MoE
+    sequence_parallel_kv: bool = True  # shard KV cache over 'model' at decode
+    pipeline_stages: int = 1       # >1 -> PP over the 'pod' axis
+    shard_vocab: bool = True
+
+
+@dataclass(frozen=True)
+class TrainPlan:
+    optimizer: str = "adamw"       # 'adamw' | 'adafactor'
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    microbatch: int = 0            # 0 -> no gradient accumulation
+    remat: str = "layer"           # 'none' | 'layer' | 'full'
+    grad_reduce_dtype: str = "bfloat16"   # gradient-compression for the DP reduce
+    moment_dtype: str = "float32"  # 'float32' | 'bfloat16' | 'int8'
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    source: str                    # provenance tag from the assignment table
+    model: ModelConfig
+    sharding: ShardingPlan = field(default_factory=ShardingPlan)
+    train: TrainPlan = field(default_factory=TrainPlan)
+
+    def shapes(self) -> Tuple[ShapeSpec, ...]:
+        """The shape cells this architecture actually runs (skips encoded)."""
+        out = []
+        for s in ALL_SHAPES:
+            if s.name == "long_500k" and not self.model.is_subquadratic:
+                continue  # full-attention skip (recorded in DESIGN.md)
+            out.append(s)
+        return tuple(out)
+
+    def skipped_shapes(self) -> Tuple[str, ...]:
+        have = {s.name for s in self.shapes()}
+        return tuple(s.name for s in ALL_SHAPES if s.name not in have)
+
+    def with_overrides(self, **kw) -> "ArchConfig":
+        return replace(self, **kw)
+
+    # -- reduced config for CPU smoke tests ---------------------------------
+    def smoke(self) -> "ArchConfig":
+        m = self.model
+        kv = min(m.n_kv_heads, 2) or 1
+        heads = max(2, kv)
+        updates = dict(
+            n_layers=max(2, min(4, (m.local_global_ratio + 1) if m.local_global_ratio else 2)),
+            d_model=64,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=32,
+            d_ff=128 if m.d_ff else 0,
+            vocab_size=256,
+            max_position=512,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        if m.n_experts:
+            updates.update(n_experts=min(m.n_experts, 4), top_k=min(m.top_k, 2),
+                           moe_d_ff=64, first_dense_layers=min(m.first_dense_layers, 1))
+        if m.ssm_state:
+            updates.update(ssm_state=16, ssm_heads=4)
+        if m.n_enc_layers:
+            updates.update(n_enc_layers=2, frontend_dim=32)
+        if m.patch_dim:
+            updates.update(patch_dim=32)
+        if m.sliding_window:
+            updates.update(sliding_window=64)
+        if m.local_window:
+            updates.update(local_window=64)
+        sm = replace(m, **updates)
+        tp = replace(self.train, microbatch=0, remat="none")
+        return ArchConfig(arch_id=self.arch_id + "-smoke", source=self.source,
+                          model=sm, sharding=self.sharding, train=tp)
+
+
+def asdict(cfg: ArchConfig) -> dict:
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,32 @@
+"""iterpro-100m — the paper-representative workload.
+
+The IterPro paper evaluates on HPC mini-apps (GTC-P, HPCCG, CoMD, miniMD,
+NPB); its *technique* protects long-running iterative loops.  In this
+framework the protected loop is LM training, so the paper-representative
+config is a ~100M-parameter dense decoder used for the end-to-end
+fault-injection campaign (benchmarks reproducing Tables 3-6 / Figs 7-10) and
+for the examples/fault_tolerant_training.py driver.
+"""
+
+from repro.configs.base import ArchConfig, ModelConfig, ShardingPlan, TrainPlan
+
+CONFIG = ArchConfig(
+    arch_id="iterpro-100m",
+    source="paper-representative workload (this work)",
+    model=ModelConfig(
+        family="dense",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        d_ff=2048,
+        vocab_size=32000,
+        head_dim=64,
+        tie_embeddings=True,
+        param_dtype="float32",
+        compute_dtype="float32",
+    ),
+    sharding=ShardingPlan(fsdp=False, tensor_parallel=True),
+    train=TrainPlan(optimizer="adamw", learning_rate=6e-4, microbatch=0,
+                    remat="none"),
+)

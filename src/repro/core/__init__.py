@@ -1,0 +1,15 @@
+"""IterPro's contribution, adapted to the training/serving loop (DESIGN §4).
+
+Detection (detect) -> diagnosis (recovery_table) -> repair (recover, via
+induction/icp, parity, microcheckpoint, replay) -> exact-or-abort verify.
+"""
+
+from repro.core.detect import ChecksumCanary, FaultReport, trap_loss_spike, trap_nonfinite  # noqa: F401
+from repro.core.faults import InjectionPlan, flip_bit, inject, inject_shard_loss, sample_plan  # noqa: F401
+from repro.core.icp import promote, recoverable_iv_count  # noqa: F401
+from repro.core.induction import IVRegistry, IVSpec, RecoveryAbort  # noqa: F401
+from repro.core.microcheckpoint import MicroCheckpointer, Snapshot  # noqa: F401
+from repro.core.parity import ParityManager  # noqa: F401
+from repro.core.recover import RecoveryEvent, RecoveryFailed, RecoveryRuntime  # noqa: F401
+from repro.core.recovery_table import RecoveryTable, TableEntry  # noqa: F401
+from repro.core.replay import ReplayResult, replay  # noqa: F401

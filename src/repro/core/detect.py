@@ -1,0 +1,112 @@
+"""Detectors — the TPU-domain analogue of the paper's free SIGSEGV trap.
+
+Ordered by cost:
+  1. ``trap_nonfinite``   — free: inspects the already-computed loss/grad-norm
+     scalars.  A transient fault that corrupts arithmetic state overwhelmingly
+     surfaces as Inf/NaN within a step or two (the paper's observation that
+     89.8% of crashes are SIGSEGV within ≤50 instructions transfers as:
+     non-finite contamination within ≤2 steps).
+  2. ``trap_loss_spike``  — free: order-of-magnitude loss jump.
+  3. ``checksum_canary``  — one HBM pass over a rotating 1/K slice of the
+     state (Pallas kernel): catches *dormant* corruption (e.g. a flipped
+     optimizer-moment bit that hasn't contaminated the loss yet), giving
+     full-state coverage every K steps at 1/K cost.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclass
+class FaultReport:
+    step: int
+    detector: str               # 'nonfinite' | 'loss_spike' | 'checksum' | 'external'
+    leaves: List[str] = field(default_factory=list)  # suspected leaf paths
+    detail: str = ""
+
+    def __str__(self):
+        where = f" leaves={self.leaves[:3]}{'...' if len(self.leaves) > 3 else ''}" \
+            if self.leaves else ""
+        return f"FaultReport(step={self.step}, {self.detector}{where} {self.detail})"
+
+
+def trap_nonfinite(step: int, metrics: Dict) -> Optional[FaultReport]:
+    for name in ("loss", "grad_norm"):
+        v = metrics.get(name)
+        if v is None:
+            continue
+        fv = float(v)
+        if not math.isfinite(fv):
+            return FaultReport(step, "nonfinite",
+                               detail=f"{name}={fv}")
+    return None
+
+
+def trap_loss_spike(step: int, metrics: Dict, history: Sequence[float],
+                    factor: float = 10.0, window: int = 8) -> Optional[FaultReport]:
+    if len(history) < window:
+        return None
+    v = metrics.get("loss")
+    if v is None:
+        return None
+    fv = float(v)
+    ref = float(np.median(list(history)[-window:]))
+    if math.isfinite(fv) and fv > factor * max(ref, 1e-6):
+        return FaultReport(step, "loss_spike",
+                           detail=f"loss={fv:.3g} median={ref:.3g}")
+    return None
+
+
+class ChecksumCanary:
+    """Rotating-slice checksum detector over a state subtree.
+
+    reference digests are refreshed after every *verified* step for the
+    slice just checked; a mismatch names the corrupted leaves exactly —
+    the Recovery Table key the runtime needs.
+    """
+
+    def __init__(self, tree, n_slices: int = 4):
+        self.n_slices = max(1, n_slices)
+        self.reference: Dict[str, np.ndarray] = kops.tree_checksums(tree)
+        self._keys = sorted(self.reference)
+
+    def _slice_keys(self, step: int) -> List[str]:
+        r = step % self.n_slices
+        return [k for i, k in enumerate(self._keys) if i % self.n_slices == r]
+
+    def refresh(self, tree, keys: Optional[Sequence[str]] = None):
+        if keys is None:
+            self.reference = kops.tree_checksums(tree)
+            return
+        cur = kops.subtree_checksums(tree, keys)   # digest only the slice
+        self.reference.update(cur)
+
+    def check(self, step: int, tree) -> Optional[FaultReport]:
+        keys = self._slice_keys(step)
+        cur = kops.subtree_checksums(tree, keys)
+        bad = [k for k in keys
+               if not np.array_equal(cur.get(k), self.reference.get(k))]
+        if bad:
+            return FaultReport(step, "checksum", leaves=sorted(bad))
+        return None
+
+    def check_full(self, step: int, tree) -> Optional[FaultReport]:
+        bad = kops.verify_tree(tree, self.reference)
+        if bad:
+            return FaultReport(step, "checksum", leaves=bad)
+        return None
+
+    def arm(self, step: int, tree) -> None:
+        """End-of-step: digest the slice that ``check(step+1, ...)`` will
+        verify.  Together with ``check`` this is the 2/K-cost rotating
+        canary: corruption landing in the armed slice between two steps is
+        caught before the next step consumes it."""
+        self.refresh(tree, self._slice_keys(step + 1))

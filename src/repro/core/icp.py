@@ -1,0 +1,60 @@
+"""Independent Compute Promotion (ICP) — the paper's Algorithm 1, applied to
+training-loop state.
+
+The paper's compiler pass promotes *derived* induction values (``i + 1``
+inside an unrolled body) into *independent* induction variables with their
+own PHI/update, because only independent copies can recover each other.
+
+The training-loop analogue: counters like ``tokens_seen`` or
+``data_offset`` are naturally *derived* (``step * global_batch``) — a
+corruption of ``step`` corrupts every derived value computed from it.  ICP
+here rewrites a derived-counter specification into independent state that
+advances by its own literal increment each iteration (see
+``train/loop.py:advance_iv``), and registers the (init, step) pair with the
+IVRegistry so Eq. (1) applies.
+
+``promote`` is the framework's ICP entry point: given the loop description
+(global batch, microbatch count), it returns the registry of independent
+IVs — the moral equivalent of running Algorithm 1 over the loop body.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.core.induction import IVRegistry
+
+
+def derived_counters(global_batch: int, n_micro: int) -> Dict[str, Tuple[int, int]]:
+    """The affine family each counter belongs to: name -> (init, step).
+
+    Before ICP these would be *expressions* over ``step``; after ICP each is
+    independent loop state with the same affine semantics.
+    """
+    return {
+        "step": (0, 1),
+        "data_offset": (0, global_batch),
+        "rng_counter": (0, 1),
+        "sched_pos": (0, 1),
+        "micro_count": (0, max(n_micro, 1)),
+    }
+
+
+def promote(arch_cfg, global_batch: int) -> IVRegistry:
+    """ICP: emit the independent-IV registry for this training loop."""
+    n_micro = max(arch_cfg.train.microbatch, 1)
+    return IVRegistry(derived_counters(global_batch, n_micro))
+
+
+def recoverable_iv_count(arch_cfg, global_batch: int,
+                         icp_enabled: bool = True) -> int:
+    """How many IVs are recoverable — the Table-6 metric.
+
+    Without ICP only ``step`` exists as true loop state (everything else is
+    derived from it), so a corruption of the one counter has *no partner* to
+    recover from: 0 recoverable.  With ICP every promoted counter has ≥1
+    independent partner: all are recoverable.
+    """
+    n = len(derived_counters(global_batch,
+                             max(arch_cfg.train.microbatch, 1)))
+    return n if icp_enabled else 0

@@ -1,0 +1,108 @@
+"""Induction-variable registry and Eq. (1) partner recovery.
+
+The paper (§3.2): for induction variables i, k updated as ``i += s_i``,
+``k += s_k`` in the same loop, a corrupted i is recovered from k via
+
+    i = (k - k0) / s_k * s_i + i0                                   Eq. (1)
+
+Here the "loop" is the training loop and the IVs are the counters in
+``TrainState['iv']`` (step, data_offset, rng_counter, sched_pos,
+micro_count) — kept *independent* by ICP (see ``core/icp.py``) precisely so
+this recovery is possible.
+
+Beyond the paper's pairwise recovery we implement *majority diagnosis*: each
+IV implies an iteration index n_x = (x - x0)/s_x; with ≥3 registered IVs the
+modal n identifies every corrupted counter at once (the paper's exact-or-
+abort rule falls out naturally: no modal majority -> abort to next rung).
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class IVSpec:
+    name: str
+    init: int
+    step: int  # per-iteration increment (loop-invariant, may be any int != 0)
+
+    def value_at(self, n: int) -> int:
+        return self.init + n * self.step
+
+    def iteration_of(self, value: int) -> Optional[int]:
+        """Implied iteration index, or None if value is inconsistent with
+        this IV's affine family (non-divisible residue)."""
+        delta = int(value) - self.init
+        if self.step == 0:
+            return None
+        n, r = divmod(delta, self.step)
+        return int(n) if r == 0 else None
+
+
+class IVRegistry:
+    """The Recovery-Table fragment for induction variables."""
+
+    def __init__(self, specs: Dict[str, Tuple[int, int]]):
+        """specs: name -> (init, step)."""
+        self.specs: Dict[str, IVSpec] = {
+            name: IVSpec(name, int(init), int(step))
+            for name, (init, step) in specs.items()
+        }
+        if not self.specs:
+            raise ValueError("empty IV registry")
+
+    # -- Eq. (1): pairwise recovery ----------------------------------------
+
+    def eq1(self, target: str, partner: str, partner_value: int) -> int:
+        """Recover ``target``'s value from a healthy ``partner`` value."""
+        ps = self.specs[partner]
+        ts = self.specs[target]
+        n = (int(partner_value) - ps.init) // ps.step
+        return ts.init + n * ts.step
+
+    # -- majority diagnosis --------------------------------------------------
+
+    def implied_iterations(self, values: Dict[str, int]) -> Dict[str, Optional[int]]:
+        return {name: self.specs[name].iteration_of(values[name])
+                for name in self.specs if name in values}
+
+    def diagnose(self, values: Dict[str, int]) -> Tuple[Optional[int], List[str]]:
+        """Returns (consensus iteration n or None, corrupted IV names).
+
+        Majority vote over implied iteration indices.  A strict majority of
+        registered IVs must agree, else (None, all names) — the
+        exact-or-abort escalation signal.
+        """
+        implied = self.implied_iterations(values)
+        votes = Counter(n for n in implied.values() if n is not None)
+        if not votes:
+            return None, sorted(implied)
+        n_star, count = votes.most_common(1)[0]
+        if count * 2 <= len(implied):
+            return None, sorted(implied)
+        bad = [name for name, n in implied.items() if n != n_star]
+        return n_star, sorted(bad)
+
+    def recover(self, values: Dict[str, int]) -> Tuple[Dict[str, int], List[str]]:
+        """Repair all corrupted IVs from the consensus iteration.
+
+        Returns (repaired values, names repaired).  Raises RecoveryAbort if
+        no consensus exists (the abort-instead-of-SDC rule).
+        """
+        n_star, bad = self.diagnose(values)
+        if n_star is None:
+            raise RecoveryAbort("no consensus among induction variables")
+        fixed = dict(values)
+        for name in bad:
+            fixed[name] = self.specs[name].value_at(n_star)
+        return fixed, bad
+
+
+class RecoveryAbort(RuntimeError):
+    """Raised when a recovery rung cannot certify an exact repair —
+    the runtime escalates to the next rung instead of risking an SDC."""

@@ -1,0 +1,311 @@
+"""RecoveryRuntime — the paper's §3.5 runtime, for the training loop.
+
+The paper's runtime is a SIGSEGV handler: inactive on the hot path, invoked
+only on a fault, it looks up the recovery kernel in the Recovery Table,
+pulls the kernel's parameters out of the stalled process image and replays
+the RSI; recovery is exact-or-abort.
+
+This runtime wraps a training loop the same way: it does *nothing* until a
+``FaultReport`` arrives (from a detector or from an external signal such as
+a device loss), then walks the leaf's recovery ladder:
+
+    rung 1  eq1           IV partner recovery (Eq. (1), ns)
+    rung 2  replica_vote  bitwise TMR vote across DP replicas
+    rung 3  parity_xor    XOR parity shard reconstruction
+    rung 4  replay        pure-step replay from a verified micro-snapshot
+    rung 5  checkpoint    classic disk restore (the paper's strawman)
+
+Every rung's repair is digest-verified before the loop resumes; a rung that
+cannot certify an exact repair escalates (the abort-instead-of-SDC rule,
+§5.3.1).  The runtime records per-recovery telemetry (rung used, wall time,
+steps lost) — the data behind the Fig-7/8 benchmarks.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detect import ChecksumCanary, FaultReport
+from repro.core.induction import IVRegistry, RecoveryAbort
+from repro.core.microcheckpoint import MicroCheckpointer
+from repro.core.parity import ParityManager
+from repro.core.recovery_table import (
+    RUNG_CHECKPOINT,
+    RUNG_EQ1,
+    RUNG_PARITY,
+    RUNG_REPLAY,
+    RUNG_REPLICA,
+    RecoveryTable,
+)
+from repro.core.replay import device_put_like, replay
+from repro.kernels import ops as kops
+
+
+@dataclass
+class RecoveryEvent:
+    """Telemetry for one recovery (one Fig-8 sample)."""
+    step: int
+    report: FaultReport
+    rung: str = ""                 # rung that succeeded
+    attempted: List[str] = field(default_factory=list)
+    wall_seconds: float = 0.0
+    steps_replayed: int = 0
+    recovered: bool = False
+    phase_seconds: Dict[str, float] = field(default_factory=dict)
+
+
+class RecoveryFailed(RuntimeError):
+    """Every rung exhausted — the job must fall back to cold restart."""
+
+
+class RecoveryRuntime:
+    """Off-hot-path recovery engine for a pure training loop.
+
+    Parameters
+    ----------
+    step_fn     : jitted step(state, batch) -> (state, metrics)
+    batch_fn    : pure batch_fn(step) -> batch  (index-addressable pipeline)
+    iv_registry : IVRegistry from ``core.icp.promote`` (ICP output)
+    micro       : MicroCheckpointer (per-step IV log + K-step snapshots)
+    parity      : optional ParityManager over the param/opt shards
+    replicas    : optional callable step -> list of ≥2 healthy replica state
+                  trees (pure-DP deployments); used by the TMR rung
+    checkpoint  : optional (load_fn() -> (state, step)) — disk restore
+    """
+
+    def __init__(self, *, step_fn, batch_fn, iv_registry: IVRegistry,
+                 micro: MicroCheckpointer,
+                 parity: Optional[ParityManager] = None,
+                 replicas: Optional[Callable] = None,
+                 checkpoint: Optional[Callable] = None,
+                 table: Optional[RecoveryTable] = None):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ivs = iv_registry
+        self.micro = micro
+        self.parity = parity
+        self.replicas = replicas
+        self.checkpoint = checkpoint
+        self.table = table
+        self.events: List[RecoveryEvent] = []
+
+    # ------------------------------------------------------------------
+    # Rung implementations.  Each returns the repaired state or raises
+    # RecoveryAbort; the ladder driver verifies and escalates.
+    # ------------------------------------------------------------------
+
+    def _rung_eq1(self, state, report: FaultReport, step: int):
+        """Repair corrupted IV counters from healthy partners (Eq. (1))."""
+        iv = {k: int(v) for k, v in state["iv"].items()}
+        fixed, bad = self.ivs.recover(iv)          # raises RecoveryAbort
+        if not bad:
+            raise RecoveryAbort("IV block consistent — fault is elsewhere")
+        new_iv = {k: jnp.asarray(v, jnp.asarray(state["iv"][k]).dtype)
+                  for k, v in fixed.items()}
+        out = dict(state)
+        out["iv"] = new_iv
+        return out, f"repaired {bad} via Eq.(1) consensus"
+
+    def _rung_replica(self, state, report: FaultReport, step: int):
+        """Bitwise TMR vote across DP replicas of the corrupted leaves."""
+        if self.replicas is None:
+            raise RecoveryAbort("no replicas maintained")
+        reps = self.replicas(step)
+        if reps is None or len(reps) < 2:
+            raise RecoveryAbort("fewer than 2 healthy replicas")
+        bad = set(report.leaves)
+
+        def heal(path, leaf, *partner_leaves):
+            key = kops.leaf_key(path)
+            if bad and key not in bad:
+                return leaf
+            if len(partner_leaves) >= 2:
+                return kops.vote3(leaf, partner_leaves[0], partner_leaves[1])
+            return partner_leaves[0]  # 2-way: trust the healthy replica
+
+        out = jax.tree_util.tree_map_with_path(heal, state, *reps[:2])
+        return out, f"replica vote over {len(reps)} replicas"
+
+    def _rung_parity(self, state, report: FaultReport, step: int):
+        """Reconstruct the corrupted shard from XOR parity."""
+        if self.parity is None:
+            raise RecoveryAbort("no parity maintained")
+        shard = getattr(report, "shard", None)
+        if shard is None:
+            # locate the corrupt shard by digest-scanning shard slices
+            shard = self._locate_shard(state, report)
+        if shard is None:
+            raise RecoveryAbort("cannot localise corrupt shard")
+        keys = report.leaves or None
+        params = self.parity.repair(state["params"], shard, keys and [
+            k.split("params/", 1)[1] for k in keys if k.startswith("params/")])
+        out = dict(state)
+        out["params"] = params
+        return out, f"parity reconstruction of shard {shard}"
+
+    def _locate_shard(self, state, report) -> Optional[int]:
+        """Find which parity shard of the first corrupted leaf disagrees with
+        its reference digest (only float leaves carry NaN evidence)."""
+        n = self.parity.n_shards
+        for key in report.leaves:
+            if not key.startswith("params/"):
+                continue
+            leaf = _leaf_by_key(state["params"], key[len("params/"):])
+            if leaf is None:
+                continue
+            arr = jnp.asarray(leaf)
+            if jnp.issubdtype(arr.dtype, jnp.floating):
+                flat = arr.reshape(-1)
+                pad = (-flat.shape[0]) % n
+                flat = jnp.pad(flat, (0, pad))
+                per = flat.shape[0] // n
+                bad = np.asarray(
+                    jnp.any(~jnp.isfinite(flat.reshape(n, per)), axis=1))
+                idx = np.nonzero(bad)[0]
+                if len(idx) == 1:
+                    return int(idx[0])
+        return None
+
+    def _rung_replay(self, state, report: FaultReport, step: int):
+        """Replay from the newest digest-verified snapshot ≤ step."""
+        snap = self.micro.latest(before=step)
+        if snap is None:
+            raise RecoveryAbort("no snapshot available")
+        rotten = self.micro.verify(snap)
+        if rotten:
+            raise RecoveryAbort(f"snapshot failed verification: {rotten[:3]}")
+        res = replay(self.step_fn, self.batch_fn, snap.state,
+                     snap.step, step, like_state=state)
+        self._last_replayed = res.steps_replayed
+        return res.state, f"replayed {res.steps_replayed} steps from {snap.step}"
+
+    def _rung_checkpoint(self, state, report: FaultReport, step: int):
+        """Classic restore — the baseline the paper seeks to avoid."""
+        if self.checkpoint is None:
+            raise RecoveryAbort("no checkpoint loader configured")
+        ck_state, ck_step = self.checkpoint()
+        res = replay(self.step_fn, self.batch_fn, ck_state, ck_step, step,
+                     like_state=state)
+        self._last_replayed = res.steps_replayed
+        return res.state, f"restored step {ck_step} + replayed to {step}"
+
+    _RUNGS = {
+        RUNG_EQ1: _rung_eq1,
+        RUNG_REPLICA: _rung_replica,
+        RUNG_PARITY: _rung_parity,
+        RUNG_REPLAY: _rung_replay,
+        RUNG_CHECKPOINT: _rung_checkpoint,
+    }
+
+    # ------------------------------------------------------------------
+    # Ladder driver
+    # ------------------------------------------------------------------
+
+    def recover(self, state, report: FaultReport, step: int,
+                verify: Optional[Callable] = None,
+                ladder: Optional[Sequence[str]] = None):
+        """Walk the ladder; return (repaired_state, RecoveryEvent).
+
+        ``verify(state) -> List[str]`` names still-corrupt leaves (empty =
+        verified).  Default: non-finite scan over float leaves.
+        """
+        ladder = list(ladder) if ladder is not None else self._ladder(report)
+        verify = verify or _default_verify
+        ev = RecoveryEvent(step=step, report=report)
+        t0 = time.perf_counter()
+        for rung in ladder:
+            fn = self._RUNGS.get(rung)
+            if fn is None:
+                continue
+            ev.attempted.append(rung)
+            self._last_replayed = 0
+            tr = time.perf_counter()
+            try:
+                cand, detail = fn(self, state, report, step)
+            except RecoveryAbort as e:
+                ev.phase_seconds[rung] = time.perf_counter() - tr
+                ev.report.detail += f" | {rung}: {e}"
+                continue
+            bad = verify(cand)
+            ev.phase_seconds[rung] = time.perf_counter() - tr
+            if bad:
+                # exact-or-abort: the repair did not certify — escalate
+                ev.report.detail += f" | {rung}: post-verify failed {bad[:2]}"
+                continue
+            ev.rung = rung
+            ev.recovered = True
+            ev.steps_replayed = self._last_replayed
+            ev.wall_seconds = time.perf_counter() - t0
+            ev.report.detail += f" | {rung}: {detail}"
+            self.events.append(ev)
+            return cand, ev
+        ev.wall_seconds = time.perf_counter() - t0
+        self.events.append(ev)
+        raise RecoveryFailed(str(report))
+
+    def _ladder(self, report: FaultReport) -> List[str]:
+        """Choose the ladder from the Recovery Table (or the default)."""
+        if self.table is not None and report.leaves:
+            entry = self.table.lookup(report.leaves[0])
+            if entry is not None:
+                return list(entry.ladder)
+        if report.leaves and all(k.startswith("iv/") for k in report.leaves):
+            return [RUNG_EQ1, RUNG_REPLAY, RUNG_CHECKPOINT]
+        return [RUNG_EQ1, RUNG_REPLICA, RUNG_PARITY, RUNG_REPLAY,
+                RUNG_CHECKPOINT]
+
+    # -- telemetry -------------------------------------------------------
+
+    def summary(self) -> Dict:
+        n = len(self.events)
+        rec = [e for e in self.events if e.recovered]
+        by_rung: Dict[str, int] = {}
+        for e in rec:
+            by_rung[e.rung] = by_rung.get(e.rung, 0) + 1
+        return {
+            "events": n,
+            "recovered": len(rec),
+            "recovery_rate": len(rec) / n if n else 1.0,
+            "by_rung": by_rung,
+            "mean_wall_ms": 1e3 * float(np.mean([e.wall_seconds
+                                                 for e in rec])) if rec else 0.0,
+            "mean_steps_replayed": float(np.mean([e.steps_replayed
+                                                  for e in rec])) if rec else 0.0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _leaf_by_key(tree, key: str):
+    found = [None]
+
+    def visit(path, leaf):
+        if kops.leaf_key(path) == key:
+            found[0] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return found[0]
+
+
+def _default_verify(state) -> List[str]:
+    """Non-finite scan over float leaves — names corrupt leaves."""
+    bad: List[str] = []
+
+    def visit(path, leaf):
+        arr = jnp.asarray(leaf)
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            if not bool(jnp.isfinite(arr).all()):
+                bad.append(kops.leaf_key(path))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, state)
+    return sorted(bad)

@@ -1,0 +1,104 @@
+"""The Recovery Table — the paper's §3.4 metadata, for train-state leaves.
+
+Paper columns: (key, symbol, parameters) where *key* identifies the faulting
+instruction, *symbol* names the recovery kernel and *parameters* name the
+terminal values the kernel replays from.
+
+Here: *key* is the state-leaf path, *symbol* is the ordered recovery ladder
+(the escalation sequence of recovery kernels applicable to that leaf) and
+*parameters* are the inputs each rung needs.  Built once per run
+("compile time") and serialisable next to checkpoint metadata.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.kernels.ops import leaf_key
+
+
+RUNG_EQ1 = "eq1"                 # induction-variable partner recovery
+RUNG_REPLICA = "replica_vote"    # TMR vote across DP replicas
+RUNG_PARITY = "parity_xor"       # XOR parity reconstruction
+RUNG_REPLAY = "replay"           # pure-step replay from snapshot
+RUNG_CHECKPOINT = "checkpoint"   # classic restore (last resort)
+
+
+@dataclass(frozen=True)
+class TableEntry:
+    key: str                      # leaf path
+    ladder: Tuple[str, ...]       # ordered recovery kernels
+    params: Tuple[str, ...]       # terminal values the first rung consumes
+    dtype: str = ""
+    shape: Tuple[int, ...] = ()
+
+
+class RecoveryTable:
+    def __init__(self, entries: Dict[str, TableEntry]):
+        self.entries = entries
+
+    @classmethod
+    def build(cls, state, *, replicated: bool = False,
+              parity: bool = False) -> "RecoveryTable":
+        """Construct the table for a train state.
+
+        replicated: DP replica copies exist (pure-DP leaves) -> replica rung
+        parity:     parity shards are maintained -> parity rung
+        """
+        entries: Dict[str, TableEntry] = {}
+        iv_names = sorted(state.get("iv", {}))
+
+        def visit(path, leaf):
+            key = leaf_key(path)
+            arr = np.asarray(leaf)
+            if key.startswith("iv/"):
+                partners = tuple(f"iv/{n}" for n in iv_names
+                                 if f"iv/{n}" != key)
+                ladder = (RUNG_EQ1, RUNG_REPLAY, RUNG_CHECKPOINT)
+                params = partners
+            else:
+                rungs: List[str] = []
+                if replicated:
+                    rungs.append(RUNG_REPLICA)
+                if parity:
+                    rungs.append(RUNG_PARITY)
+                rungs += [RUNG_REPLAY, RUNG_CHECKPOINT]
+                ladder = tuple(rungs)
+                params = ("snapshot", "iv/step")
+            entries[key] = TableEntry(key=key, ladder=ladder, params=params,
+                                      dtype=str(arr.dtype),
+                                      shape=tuple(arr.shape))
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, state)
+        return cls(entries)
+
+    def lookup(self, key: str) -> Optional[TableEntry]:
+        if key in self.entries:
+            return self.entries[key]
+        # prefix match (a report may name a subtree)
+        for k, e in self.entries.items():
+            if k.startswith(key) or key.startswith(k):
+                return e
+        return None
+
+    def to_json(self) -> str:
+        return json.dumps({k: asdict(e) for k, e in self.entries.items()},
+                          indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RecoveryTable":
+        raw = json.loads(text)
+        return cls({k: TableEntry(key=v["key"], ladder=tuple(v["ladder"]),
+                                  params=tuple(v["params"]),
+                                  dtype=v.get("dtype", ""),
+                                  shape=tuple(v.get("shape", ())))
+                    for k, v in raw.items()})
+
+    def __len__(self):
+        return len(self.entries)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenPipeline, shard_assignment  # noqa: F401

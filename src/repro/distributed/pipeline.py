@@ -1,0 +1,89 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN §5: optional
+PP across the 'pod' axis at multi-pod scale).
+
+`gpipe(stage_fn, n_stages, axis)` builds a shard_map-able SPMD program:
+stage s holds slice s of the stacked stage params; microbatches flow
+through the stages via `ppermute`, with the classic (M + S - 1)-step
+schedule and masked bubbles.  The last stage's outputs are psum-merged so
+every rank returns the full output (convenient for loss computation).
+
+Use case at 1000+-node scale: when a model's layers do not fit a pod even
+under FSDP, stages map onto pods and only (B_micro, d) activations cross
+the DCN per schedule tick — orders of magnitude less inter-pod traffic
+than FSDP gathers.  Correctness is validated against the sequential
+composition in tests/test_pipeline.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(stage_fn: Callable, n_stages: int, axis: str):
+    """Returns body(stage_params, xs) for use inside shard_map.
+
+    stage_params: pytree with leaves (1, ...) — this rank's stage slice.
+    xs: (M, B, d) microbatched input, replicated over the stage axis.
+    Returns (M, B, d) outputs, replicated.
+    """
+
+    def body(stage_params, xs):
+        params = jax.tree_util.tree_map(lambda p: p[0], stage_params)
+        s = jax.lax.axis_index(axis)
+        M = xs.shape[0]
+        T = M + n_stages - 1
+
+        def tick(t, state):
+            carry_in, out = state
+            mb = t - s                        # microbatch index at stage s
+            active = (mb >= 0) & (mb < M)
+
+            # stage 0 reads from the input queue; others from the wire
+            x0 = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, M - 1), axis=0, keepdims=False)
+            x_in = jnp.where(s == 0, x0, carry_in)
+
+            y = stage_fn(params, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+
+            # last stage commits its finished microbatch
+            write = active & (s == n_stages - 1)
+            idx = jnp.clip(mb, 0, M - 1)
+            slot = jax.lax.dynamic_index_in_dim(out, idx, axis=0,
+                                                keepdims=False)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, jnp.where(write, y, slot), idx, axis=0)
+
+            # advance the pipe: stage i -> i+1
+            carry_next = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+            return (carry_next, out)
+
+        carry0 = jnp.zeros_like(xs[0])
+        out0 = jnp.zeros_like(xs)
+        _, out = jax.lax.fori_loop(0, T, tick, (carry0, out0))
+        # only the last stage wrote; merge so every rank holds the result
+        return jax.lax.psum(out, axis)
+
+    return body
+
+
+def pipeline_apply(stage_fn: Callable, stacked_params, xs, mesh,
+                   axis: str = "stage"):
+    """Convenience wrapper: shard stage params over ``axis`` and run the
+    pipeline.  stacked_params leaves: (S, ...); xs: (M, B, d) replicated."""
+    n_stages = mesh.shape[axis]
+    body = gpipe(stage_fn, n_stages, axis)
+    pspec = jax.tree_util.tree_map(
+        lambda p: P(axis, *([None] * (p.ndim - 1))), stacked_params)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P()),
+        out_specs=P(),
+        check_vma=False,
+    )(stacked_params, xs)

@@ -1,0 +1,270 @@
+"""Partition-spec generation for every train-state leaf.
+
+Rules are name/shape driven over the flattened param tree.  Every rule goes
+through a divisibility guard — a dim that does not divide its mesh axis is
+silently replicated instead of crashing the partitioner (e.g. xLSTM's 4
+heads on a 16-wide model axis).
+
+Layout summary (the baseline recipe; §Perf iterates on this):
+    embeddings   (V, d)      -> (model, fsdp)
+    qkv/up/gate  (d, out)    -> (fsdp, model)
+    wo/down      (in, d)     -> (model, fsdp)
+    MoE experts  (E, d, ff)  -> (None, fsdp, model)   [gathered per layer]
+    norms/scalars            -> replicated
+    optimizer moments        -> same spec as their param
+Stacked (scan) leaves get leading ``None``s for the stack dims.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import DistContext
+
+# weight names whose *output* (last) dim shards over the model axis
+_OUT_MODEL = {"wq", "wk", "wv", "gate", "up", "in_proj", "w_up", "head",
+              "src_proj", "patch_proj", "in_fuse"}
+# weight names whose *input* (first logical) dim shards over the model axis
+_IN_MODEL = {"wo", "down", "out_proj"}
+# per-head vectors that shard over model when divisible
+_HEAD_VECS = {"A_log", "D", "dt_bias"}
+
+
+def _axis_size(ctx: DistContext, axes) -> int:
+    if not ctx.enabled:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([ctx.mesh.shape[a] for a in axes]))
+
+
+def _guard(ctx: DistContext, dim: int, axes) -> Optional[object]:
+    """Return axes if dim divides the axes' total size, else None."""
+    if axes is None:
+        return None
+    size = _axis_size(ctx, axes)
+    return axes if (size > 1 and dim % size == 0) else None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def _logical_rank(names: Tuple[str, ...], shape) -> int:
+    """How many trailing dims are the 'logical' weight dims (the rest are
+    scan-stacking dims).  Heuristic: biases/norm scales are rank-1 vectors;
+    matrices rank-2; conv weights (K, C) rank-2; MoE experts / lora / sLSTM-r
+    rank-3."""
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+    if leaf in ("scale", "b", "conv_b", "skip", "A_log", "D", "dt_bias"):
+        return 1
+    if leaf in ("q", "m"):  # int8 moment payload (blocks, QBLOCK) / mlstm m
+        return 2
+    if leaf in ("gate", "up", "down") and parent == "ffn" and len(shape) >= 3:
+        return 3  # raw MoE expert stacks (E, d, ff)
+    if leaf == "r":
+        return 3  # sLSTM recurrent (H, Dh, 4Dh)
+    if leaf in ("a", "b") and parent in ("wq", "wk", "wv", "wo", "gate",
+                                         "up", "down"):
+        return 2  # lora factors
+    if leaf in ("w", "table", "conv_w"):
+        return 2
+    return min(2, len(shape))
+
+
+def spec_for_param(ctx: DistContext, path, leaf, sharding_plan,
+                   model_cfg=None) -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+    fsdp_axes = ctx.batch_axes if (sharding_plan.fsdp and ctx.enabled) else None
+    model = ctx.model_axis if ctx.enabled else None
+
+    # Attention projections shard over *whole heads*: a model axis that does
+    # not divide the head count must not slice head_dim (the contraction dim
+    # of QK^T) — GSPMD would otherwise emit partial-sum all-reduces of the
+    # full (B,H,Sq,Sk) score tensor.  Heads that don't divide => replicate.
+    if model_cfg is not None and ctx.enabled and len(names) >= 2 \
+            and names[-2] in ("wq", "wk", "wv", "wo") and "attn" in names:
+        tp = ctx.tp_size
+        heads = model_cfg.n_kv_heads if names[-2] in ("wk", "wv") \
+            else model_cfg.n_heads
+        if heads % tp != 0:
+            model = None
+
+    lr = _logical_rank(names, shape)
+    lead = (None,) * (len(shape) - lr)
+    logical = shape[len(shape) - lr:]
+    leaf_name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    # ---- MoE expert stacks (E, d, ff) / (E, ff, d) -------------------------
+    ep = (sharding_plan.expert_parallel and ctx.enabled
+          and logical and logical[0] % _axis_size(ctx, model or ()) == 0
+          if lr == 3 and parent == "ffn" else False)
+    if lr == 3 and leaf_name in ("gate", "up") and parent == "ffn":
+        if ep:  # experts over model, d over data (EP storage layout)
+            return spec(_guard(ctx, logical[0], model),
+                        _guard(ctx, logical[1], fsdp_axes), None)
+        return spec(None, _guard(ctx, logical[1], fsdp_axes),
+                    _guard(ctx, logical[2], model))
+    if lr == 3 and leaf_name == "down" and parent == "ffn":
+        if ep:
+            return spec(_guard(ctx, logical[0], model), None,
+                        _guard(ctx, logical[2], fsdp_axes))
+        return spec(None, _guard(ctx, logical[1], model),
+                    _guard(ctx, logical[2], fsdp_axes))
+    if leaf_name == "r":
+        return spec(_guard(ctx, logical[0], model), None, None)
+
+    # ---- embeddings --------------------------------------------------------
+    if leaf_name == "table":
+        return spec(_guard(ctx, logical[0], model),
+                    _guard(ctx, logical[1], fsdp_axes))
+
+    # ---- router (keep replicated: fp32, tiny, read every step) -------------
+    if parent == "router" or gparent == "router":
+        return spec(*([None] * lr))
+
+    # ---- lora factors -------------------------------------------------------
+    if leaf_name == "a" and parent in _OUT_MODEL | _IN_MODEL:
+        return spec(_guard(ctx, logical[0],
+                           model if parent in _IN_MODEL else fsdp_axes), None)
+    if leaf_name == "b" and parent in _OUT_MODEL | _IN_MODEL and lr == 2 \
+            and parent not in ("",):
+        return spec(None, _guard(ctx, logical[1],
+                                 fsdp_axes if parent in _IN_MODEL else model))
+
+    # ---- dense weights ------------------------------------------------------
+    if leaf_name == "w" or (leaf_name == "q" and False):
+        owner = parent
+        if owner in _OUT_MODEL:
+            return spec(_guard(ctx, logical[0], fsdp_axes),
+                        _guard(ctx, logical[1], model))
+        if owner in _IN_MODEL:
+            return spec(_guard(ctx, logical[0], model),
+                        _guard(ctx, logical[1], fsdp_axes))
+        if owner in ("gates", "w"):  # xlstm gate proj / slstm w
+            return spec(_guard(ctx, logical[0], fsdp_axes),
+                        _guard(ctx, logical[1], model))
+        return spec(*([None] * lr))
+
+    # ---- biases -------------------------------------------------------------
+    if leaf_name == "b":
+        owner = parent
+        if owner in _OUT_MODEL or owner in ("gates", "w"):
+            return spec(_guard(ctx, logical[0], model))
+        return spec(None)
+
+    # ---- convs / per-head vectors -------------------------------------------
+    if leaf_name == "conv_w":
+        return spec(None, _guard(ctx, logical[1], model))
+    if leaf_name == "conv_b":
+        return spec(_guard(ctx, logical[0], model))
+    if leaf_name in _HEAD_VECS:
+        return spec(_guard(ctx, logical[0], model))
+    if leaf_name == "skip":
+        return spec(_guard(ctx, logical[0], model))
+
+    # ---- int8 moment payloads ------------------------------------------------
+    if leaf_name in ("q", "scale") and len(shape) >= 2 and parent not in (
+            "attn", "ffn"):
+        return P(*([None] * len(shape)))
+
+    # default: replicate (norm scales etc.)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(ctx: DistContext, params, sharding_plan, model_cfg=None):
+    """PartitionSpec pytree for a param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(ctx, path, leaf, sharding_plan,
+                                          model_cfg),
+        params)
+
+
+def opt_state_specs(ctx: DistContext, params, pspecs, train_plan):
+    """Optimizer-state specs derived from the param specs.
+
+    * AdamW fp32/bf16 moments: identical tree -> identical specs (ZeRO).
+    * AdamW int8 moments: (nblocks, QBLOCK) payloads -> shard blocks over the
+      fsdp axes when divisible, else replicate.
+    * Adafactor: vr drops the last dim's spec entry, vc drops the
+      second-to-last (factored stats follow their surviving dims).
+    """
+    if train_plan.optimizer == "adafactor":
+        def fact(p, s):
+            dims = tuple(s) + (None,) * (p.ndim - len(tuple(s)))
+            if p.ndim >= 2:
+                return {"vr": P(*dims[:-1]),
+                        "vc": P(*(dims[:-2] + dims[-1:]))}
+            return {"v": P(*dims)}
+        return {"stats": jax.tree_util.tree_map(fact, params, pspecs)}
+
+    if train_plan.moment_dtype == "int8":
+        def q8spec(p, s):
+            del s
+            return {"q": P(None, None), "scale": P(None, None)}
+        one = jax.tree_util.tree_map(q8spec, params, pspecs)
+        return {"m": one, "v": one}
+
+    return {"m": pspecs, "v": pspecs}
+
+
+def batch_specs(ctx: DistContext, batch):
+    """Batch arrays shard their leading (batch) dim over the batch axes."""
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        ax = _guard(ctx, b, ctx.batch_axes)
+        return P(*((ax,) + (None,) * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_specs(ctx: DistContext, cache):
+    """Decode caches: shard batch dim over data axes when divisible; shard
+    the sequence (capacity) dim over model (SP) — KV heads rarely divide a
+    16-wide model axis, the sequence always does."""
+    def spec(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0:
+            return P()
+        if names[-1] in ("k", "v", "mem_k", "mem_v") and leaf.ndim >= 4:
+            # (count?, B, S, KV, D) or (L, B, S, KV, D)
+            lead = leaf.ndim - 4
+            B, S = leaf.shape[lead], leaf.shape[lead + 1]
+            baxis = _guard(ctx, B, ctx.batch_axes)
+            saxis = _guard(ctx, S, ctx.model_axis)
+            if baxis is None and ctx.enabled:
+                # B=1 long-context: shard S over data too
+                saxis = _guard(ctx, S, ctx.batch_axes + (ctx.model_axis,))
+            return P(*((None,) * lead + (baxis, saxis, None, None)))
+        # ssm/conv/mlstm states: (count?, B, ...) -> batch over data;
+        # dim0 is the scan-stack dim when dim1 divides the batch axes.
+        if leaf.ndim >= 2:
+            b0 = _guard(ctx, leaf.shape[0], ctx.batch_axes)
+            b1 = _guard(ctx, leaf.shape[1], ctx.batch_axes)
+            if b1 is not None:
+                return P(*((None, b1) + (None,) * (leaf.ndim - 2)))
+            if b0 is not None:
+                return P(*((b0,) + (None,) * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(spec, cache)

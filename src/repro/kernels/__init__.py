@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the IterPro detection/redundancy hot path.
+
+checksum — blocked Fletcher digest (the ~free canary detector)
+vote     — bitwise TMR majority across replicas (replica repair)
+parity   — XOR parity fold / reconstruction (manufactured redundancy)
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+with jit'd wrappers in ops.py and pure-jnp oracles in ref.py.  All
+algorithms are bitwise/integer — tests assert bit-exact equality.
+Kernels run compiled on TPU, interpret=True elsewhere.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,199 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: arbitrary shapes/dtypes (bit-cast + pad to tile multiples), exact
+digest recombination across tiles, interpret-mode selection (Pallas kernels
+execute in interpret mode on CPU; compiled mode on TPU), and pytree-level
+orchestration (leaf digests for whole train states).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import checksum as _ck
+from repro.kernels import parity as _pk
+from repro.kernels import ref as _ref
+from repro.kernels import vote as _vk
+
+TILE = _ck.TILE  # int32 elements per kernel tile
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tiles(x) -> Tuple[jnp.ndarray, int]:
+    """Flat int32 view padded and reshaped to (nt, TILE_ROWS, LANES)."""
+    flat = _ref.to_i32(x)
+    n = flat.shape[0]
+    nt = max(1, -(-n // TILE))
+    flat = jnp.pad(flat, (0, nt * TILE - n))
+    return flat.reshape(nt, _ck.TILE_ROWS, _ck.LANES), n
+
+
+@partial(jax.jit, static_argnames=("block",))
+def checksum(x, block: int = _ref.CHECKSUM_BLOCK) -> jnp.ndarray:
+    """Two-term Fletcher digest int32[2] of the raw bits of ``x``.
+
+    Tile digests (s1_t, s2_t) combine exactly:
+        s1 = Σ_t s1_t
+        s2 = Σ_t (s2_t + offset_t · s1_t)      (mod 2^32)
+    """
+    del block
+    tiles, _ = _tiles(x)
+    d = _ck.checksum_tiles(tiles, interpret=_interpret())  # (nt, 2)
+    nt = d.shape[0]
+    offsets = jnp.arange(nt, dtype=jnp.int32) * jnp.int32(TILE)
+    s1 = jnp.sum(d[:, 0], dtype=jnp.int32)
+    s2 = jnp.sum(d[:, 1] + offsets * d[:, 0], dtype=jnp.int32)
+    return jnp.stack([s1, s2])
+
+
+@jax.jit
+def blocked_checksum(x) -> jnp.ndarray:
+    """Per-tile digests int32[nt, 2] (fault localisation granularity =
+    TILE int32 lanes = 128 KiB)."""
+    tiles, _ = _tiles(x)
+    return _ck.checksum_tiles(tiles, interpret=_interpret())
+
+
+@jax.jit
+def vote3(a, b, c):
+    """Bitwise majority of three equal-shaped arrays, original dtype out."""
+    ta, n = _tiles(a)
+    tb, _ = _tiles(b)
+    tc, _ = _tiles(c)
+    out = _vk.vote3_tiles(ta, tb, tc, interpret=_interpret())
+    return _ref.from_i32(out.reshape(-1)[:n], a)
+
+
+@jax.jit
+def xor_fold(arrays: Sequence[jnp.ndarray]):
+    """Parity of N equal-shaped arrays (original dtype out)."""
+    ts = []
+    n = None
+    for a in arrays:
+        t, n = _tiles(a)
+        ts.append(t)
+    stacked = jnp.stack(ts)  # (R, nt, rows, lanes)
+    out = _pk.xor_fold_tiles(stacked, interpret=_interpret())
+    return _ref.from_i32(out.reshape(-1)[:n], arrays[0])
+
+
+@jax.jit
+def xor_reconstruct(parity, others: Sequence[jnp.ndarray]):
+    """Recover the missing shard from parity + the surviving shards."""
+    return xor_fold(list(others) + [parity])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 0, block_k: int = 0):
+    """Model-layout flash attention: q (B, Sq, H, D), k/v (B, Sk, KV, D).
+
+    Handles GQA flattening, block-multiple padding of Sq/Sk and lane-multiple
+    (128) padding of D, then calls the Pallas kernel (compiled on TPU,
+    interpret elsewhere).  Returns (B, Sq, H, D) in q.dtype.
+    """
+    from repro.kernels import flash_attention as _fa
+
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    bq = block_q or min(_fa.DEFAULT_BLOCK_Q, max(Sq, 16))
+    bk = block_k or min(_fa.DEFAULT_BLOCK_K, max(Sk, 16))
+
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    # lane alignment: round D up to a multiple of 128 (tiny test dims are
+    # left alone — interpret mode has no lane constraint)
+    pad_d = (-D) % 128 if D >= 128 else 0
+
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, pad_d)))
+    kt = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    vt = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+
+    # (B, S, H, D) -> (B*H, S, D); kv -> (B*KV, S, D).  The kernel's GQA
+    # index map assumes q-head-major flattening per batch.
+    qf = qt.transpose(0, 2, 1, 3).reshape(B * H, Sq + pad_q, D + pad_d)
+    kf = kt.transpose(0, 2, 1, 3).reshape(B * KV, Sk + pad_k, D + pad_d)
+    vf = vt.transpose(0, 2, 1, 3).reshape(B * KV, Sk + pad_k, D + pad_d)
+
+    # scale by true D, not padded D: kernel scales by padded; correct it
+    o = _fa.flash_attention_bhsd(
+        qf * np.sqrt((D + pad_d) / D).astype(qf.dtype),
+        kf, vf, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=_interpret())
+    o = o.reshape(B, H, Sq + pad_q, D + pad_d).transpose(0, 2, 1, 3)
+    return o[:, :Sq, :, :D]
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level orchestration
+# ---------------------------------------------------------------------------
+
+def leaf_key(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_checksums(tree) -> Dict[str, np.ndarray]:
+    """Digest per leaf, keyed by path string — the Recovery Table's 'key'
+    column (the paper keys on (file, line, column) debug tuples; ours is the
+    state-leaf path, which plays the same role)."""
+    out = {}
+
+    def visit(path, leaf):
+        out[leaf_key(path)] = np.asarray(checksum(leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+def subtree_checksums(tree, keys) -> Dict[str, np.ndarray]:
+    """Digests for the named leaves only (the rotating-canary read slice —
+    the paid 1/K of the detection cost; everything else is modeled as fused
+    into the step's write stream)."""
+    want = set(keys)
+    out = {}
+
+    def visit(path, leaf):
+        k = leaf_key(path)
+        if k in want:
+            out[k] = np.asarray(checksum(leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+def verify_tree(tree, reference: Dict[str, np.ndarray]) -> List[str]:
+    """Return leaf paths whose digest no longer matches ``reference``."""
+    current = tree_checksums(tree)
+    bad = []
+    for k, ref_digest in reference.items():
+        cur = current.get(k)
+        if cur is None or not np.array_equal(cur, ref_digest):
+            bad.append(k)
+    return sorted(bad)
+
+
+def rotating_slice(step: int, n_slices: int, n_leaves: int) -> List[int]:
+    """Indices of the leaves checked at ``step`` under the rotating-canary
+    schedule (full coverage every n_slices steps at 1/n_slices the cost)."""
+    return [i for i in range(n_leaves) if i % n_slices == step % n_slices]

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: XOR parity fold / single-shard reconstruction.
+
+The ICP analogue for *sharded* state (DESIGN.md §4.2): a parity shard is the
+manufactured independent partner.  XOR is bit-exact — reconstruction returns
+the lost shard's exact bits, so the exact-or-abort rule holds with no
+floating-point caveats.  The fold walks the replica axis in VMEM-resident
+(256, 128) int32 tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+TILE_ROWS = 256
+
+
+def _xor_fold_kernel(x_ref, out_ref):
+    """x_ref: (R, 1, TILE_ROWS, LANES) — all R replicas of one tile."""
+    x = x_ref[:, 0, :, :]
+    R = x.shape[0]
+    acc = x[0]
+    for r in range(1, R):
+        acc = acc ^ x[r]
+    out_ref[0] = acc
+
+
+def xor_fold_tiles(x, *, interpret: bool = True):
+    """x: (R, nt, TILE_ROWS, LANES) int32 -> parity (nt, TILE_ROWS, LANES)."""
+    R, nt = x.shape[0], x.shape[1]
+    return pl.pallas_call(
+        _xor_fold_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((R, 1, TILE_ROWS, LANES),
+                               lambda i: (0, i, 0, 0))],
+        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, TILE_ROWS, LANES), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell:
+    jit(program, in_shardings, out_shardings).lower(**input_specs).compile()
+must succeed; we record ``memory_analysis()`` (fits per chip?),
+``cost_analysis()`` (FLOPs / bytes) and the collective schedule parsed from
+the optimized HLO — the inputs to EXPERIMENTS.md §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--out dryrun_results.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import get_config, get_shape, list_archs
+from repro.distributed.context import DistContext
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_cost as HC
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.specs import input_specs
+from repro.models.registry import get_model
+from repro.train.loop import make_train_step
+
+
+def build_program(cfg, shape, ctx):
+    """The callable lowered for this cell."""
+    model = get_model(cfg.model)
+    mcfg = cfg.model
+    if shape.kind == "train":
+        step = make_train_step(cfg, ctx=ctx, global_batch=shape.global_batch)
+        return lambda state, batch: step(state, batch)
+    if shape.kind == "prefill":
+        return lambda params, batch: model.prefill(params, mcfg, batch, ctx,
+                                                   max_len=shape.seq_len)
+    if shape.kind == "decode":
+        return lambda params, cache, token: model.decode_step(
+            params, mcfg, cache, token, ctx)
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             *, keep_hlo: bool = False, variant: Optional[Dict] = None,
+             tag: str = "") -> Dict:
+    """One dry-run cell.  ``variant`` drives §Perf experiments:
+        {"mesh_shape": (64, 4), "mesh_axes": ("data", "model"),
+         "flash_threshold": 2048,
+         "train": {"microbatch": 0}, "model": {"moe_impl": "..."}}
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "kind": shape.kind}
+    if tag:
+        rec["tag"] = tag
+    if variant:
+        rec["variant"] = {k: v for k, v in variant.items()}
+    if shape_name in cfg.skipped_shapes():
+        rec.update(status="skipped",
+                   reason="full-attention arch: long_500k requires "
+                          "sub-quadratic attention (DESIGN.md §6)")
+        return rec
+
+    if variant:
+        if variant.get("train"):
+            cfg = cfg.with_overrides(
+                train=_dc.replace(cfg.train, **variant["train"]))
+        if variant.get("model"):
+            cfg = cfg.with_overrides(
+                model=_dc.replace(cfg.model, **variant["model"]))
+        if variant.get("flash_threshold") is not None:
+            from repro.models import layers as _L
+            _L.FLASH_THRESHOLD = variant["flash_threshold"]
+        if variant.get("q_chunk"):
+            from repro.models import layers as _L
+            _L.Q_CHUNK = variant["q_chunk"]
+        if variant.get("kv_chunk"):
+            from repro.models import layers as _L
+            _L.KV_CHUNK = variant["kv_chunk"]
+        if variant.get("loss_chunk"):
+            from repro.models import transformer as _T
+            _T.LOSS_CHUNK = variant["loss_chunk"]
+
+    if variant and variant.get("mesh_shape"):
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(variant["mesh_shape"],
+                         variant.get("mesh_axes", ("data", "model")))
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh_chip_count(mesh)
+    ctx = DistContext.for_mesh(mesh, fsdp=cfg.sharding.fsdp)
+
+    t0 = time.perf_counter()
+    try:
+        structs, shardings = input_specs(cfg, shape, ctx)
+        program = build_program(cfg, shape, ctx)
+        jitted = jax.jit(
+            program,
+            in_shardings=tuple(shardings[k] for k in structs),
+        )
+        with mesh:
+            lowered = jitted.lower(*structs.values())
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        hc = HC.analyze(hlo)          # trip-count-aware text analysis
+        mflops = H.model_flops_for_cell(cfg, shape)
+        roof = H.hlo_cost_to_roofline(hc, chips, mflops)
+
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem),
+            xla_cost={k: cost[k] for k in ("flops", "bytes accessed")
+                      if cost and k in cost},   # per-device, scan-once (raw)
+            hlo_cost=hc.to_dict(),
+            roofline=roof.to_dict(),
+            hlo_lines=len(hlo.splitlines()),
+        )
+        if keep_hlo:
+            rec["hlo"] = hlo
+    except Exception as e:  # a failing cell is a bug in our system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def _mem_dict(mem) -> Dict:
+    if mem is None:
+        return {}
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, name, None)
+        if v is not None:
+            out[name] = int(v)
+    # bytes per device: arguments+temp+output are per-device figures for SPMD
+    out["per_device_total"] = sum(out.get(k, 0) for k in
+                                  ("argument_size_in_bytes",
+                                   "temp_size_in_bytes",
+                                   "output_size_in_bytes"))
+    return out
+
+
+def iter_cells(archs, shapes, meshes):
+    for arch in archs:
+        cfg = get_config(arch)
+        arch_shapes = shapes or [s.name for s in cfg.shapes()]
+        for shape_name in arch_shapes:
+            for mesh_kind in meshes:
+                yield arch, shape_name, mesh_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--append", action="store_true",
+                    help="merge into --out instead of overwriting")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="JSON variant dict for §Perf experiments")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    variant = json.loads(args.variant) if args.variant else None
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = [args.shape] if args.shape else None
+
+    results = []
+    if args.append and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch, shape_name, mesh_kind in iter_cells(archs, shapes, meshes):
+        if (arch, shape_name, mesh_kind) in done and not variant:
+            continue
+        rec = run_cell(arch, shape_name, mesh_kind, keep_hlo=args.keep_hlo,
+                       variant=variant, tag=args.tag)
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compile={rec['compile_s']}s"
+                     f" bottleneck={r['bottleneck']}"
+                     f" roofline={r['roofline_fraction']:.3f}")
+        elif status == "error":
+            extra = " " + rec["error"][:120]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: {status}{extra}",
+              flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

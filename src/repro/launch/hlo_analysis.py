@@ -1,0 +1,328 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but NOT collective traffic,
+so we parse the optimized HLO text: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction
+contributes its operand bytes (max of input/output — the larger side is
+what actually crosses links for AG/RS).
+
+Roofline model (TPU v5e constants, per task spec):
+    compute    = HLO_FLOPs   / (chips * 197e12 FLOP/s)
+    memory     = HLO_bytes   / (chips * 819e9  B/s)
+    collective = coll_bytes  / (chips * 50e9   B/s/link)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape literal: bf16[256,4096,1024]{2,1,0:T(8,128)}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _line_shapes(text: str) -> List[int]:
+    return [_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(text)]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in optimized HLO text.
+
+    HLO lines look like::
+
+        %ag = bf16[512,8192]{...} all-gather(%x), replica_groups=...
+
+    The output shape leads; input shapes appear in the operand list only as
+    operand *names*, so per-line we conservatively take the line's largest
+    shape literal (output for AG/AR, which equals max(in,out) for AG; for RS
+    the larger *input* appears when the op is written with explicit operand
+    shapes — fused ops do include them).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        m = re.search(r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{}:()\s.]*?\b(" +
+                      "|".join(_COLLECTIVES) + r")\b", s)
+        if m is None:
+            # also catch "xxx = bf16[..] all-reduce(" simple form
+            hit = None
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in s or s.startswith(f"{kind}("):
+                    hit = kind
+                    break
+            if hit is None:
+                continue
+            kind = hit
+        else:
+            kind = m.group(1)
+        # `all-reduce-start`/`-done` pairs: count the start only
+        if "-done" in s:
+            continue
+        sizes = _line_shapes(s.split("(", 1)[0])  # shapes before the operand list
+        if not sizes:
+            sizes = _line_shapes(s)
+        if not sizes:
+            continue
+        nbytes = max(sizes) if kind != "all-to-all" else max(sizes)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    flops: float               # total HLO FLOPs for the program (all chips)
+    hbm_bytes: float            # total HLO bytes accessed (all chips)
+    coll_bytes: float           # total collective bytes (all chips)
+    chips: int
+    model_flops: float = 0.0    # 6*N*D-style useful FLOPs
+    coll_seconds: float = 0.0   # per-device collective seconds (algo-factored)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        if self.coll_seconds:
+            return self.coll_seconds
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time (perfect overlap of the three engines)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time — the score."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / self.t_bound
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def cost_to_roofline(cost: Dict, coll: CollectiveStats, chips: int,
+                     model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    return Roofline(flops=flops, hbm_bytes=nbytes,
+                    coll_bytes=float(coll.total_bytes), chips=chips,
+                    model_flops=model_flops)
+
+
+def hlo_cost_to_roofline(hc, chips: int, model_flops: float) -> Roofline:
+    """Build the roofline from the trip-count-aware text analysis
+    (``hlo_cost.analyze``).  ``hc`` carries per-device numbers."""
+    from repro.launch.hlo_cost import collective_seconds
+    return Roofline(
+        flops=hc.flops * chips,
+        hbm_bytes=hc.hbm_bytes * chips,
+        coll_bytes=hc.coll_bytes * chips,
+        chips=chips,
+        model_flops=model_flops,
+        coll_seconds=collective_seconds(hc.coll_bytes_by_kind, ICI_BW),
+    )
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs (6*N*D for dense; 6*N_active*D for MoE; attention term added)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg) -> Tuple[int, int]:
+    """(total_params, active_params) — ``active`` is a COMPUTE proxy:
+    weight-tied blocks (zamba2's shared attention) count once per
+    *application*, and MoE counts top-k experts only."""
+    total, active, enc = _param_components(cfg)
+    return int(total), int(active + enc)
+
+
+def _param_components(cfg) -> Tuple[float, float, float]:
+    """(total_stored, decoder_active_per_token, encoder_params)."""
+    m = cfg.model
+    d, L, V = m.d_model, m.n_layers, m.vocab_size
+    H, KV, Dh = m.n_heads, m.n_kv_heads, m.resolved_head_dim
+    attn = d * H * Dh + 2 * d * KV * Dh + H * Dh * d          # q,k,v,o
+    dense_mlp = 3 * d * m.d_ff                                  # gate,up,down
+    total = active = V * d                                      # embed
+    if not m.tie_embeddings:
+        total += V * d
+        active += V * d
+
+    if m.family == "ssm":
+        # xLSTM block: q/k/v/o projections + gates (approx 8 d^2 per block)
+        per = 8 * d * d
+        total += L * per
+        active += L * per
+    elif m.family == "hybrid" and m.shared_attn:
+        # ONE shared attention block, applied L // (ratio+1) times
+        n_attn = L // (m.hybrid_ratio + 1) if m.hybrid_ratio else 0
+        shared = attn + dense_mlp + 2 * d * d                  # + in_fuse
+        total += shared
+        active += shared * n_attn                              # compute proxy
+        dinner = m.ssm_expand * d
+        mamba = 3 * d * dinner + 2 * dinner * m.ssm_state      # per block
+        total += L * mamba
+        active += L * mamba
+    else:
+        for layer in range(L):
+            total += attn
+            active += attn
+            if m.n_experts and layer >= m.first_dense_layers:
+                ff = m.moe_d_ff or m.d_ff
+                expert = 3 * d * ff
+                total += m.n_experts * expert + m.n_shared_experts * expert
+                active += m.top_k * expert + m.n_shared_experts * expert
+            elif m.d_ff:
+                total += dense_mlp
+                active += dense_mlp
+            if m.ssm_state and m.family != "hybrid":
+                dinner = m.ssm_expand * d
+                total += 3 * d * dinner
+                active += 3 * d * dinner
+
+    enc = 0.0
+    if m.n_enc_layers:
+        enc = m.n_enc_layers * (attn + dense_mlp)
+        total += enc
+        # cross-attention projections in every decoder layer
+        cross = L * (2 * d * KV * Dh)
+        total += cross
+        active += cross
+    return total, active, enc
+
+
+def _attn_context_lengths(cfg, S: int) -> list:
+    """Effective context length per layer (window-aware)."""
+    m = cfg.model
+    out = []
+    for _ in range(m.n_enc_layers or 0):
+        out.append(S)  # encoder full self-attention
+    if m.family in ("ssm",):
+        return out  # no attention layers
+    n = m.n_layers
+    if m.family == "hybrid" and m.hybrid_ratio:
+        n = max(1, n // (m.hybrid_ratio + 1))  # only the shared-attn layers
+    for i in range(n):
+        if m.local_global_ratio:
+            r = m.local_global_ratio
+            w = m.local_window if (i % (r + 1)) != r else 0
+        else:
+            w = m.sliding_window
+        out.append(min(w, S) if w else S)
+    return out
+
+
+SRC_FRAMES = 512   # enc-dec modality-stub source length (launch/specs.py)
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """Useful-FLOPs denominator for MFU: 6*N_active*D (train) or 2*N_active*D
+    (inference) PLUS the attention quadratic term (PaLM-style accounting,
+    causal-halved, window-aware).  decode cells process B tokens/step.
+
+    enc-dec cells follow serving semantics: *prefill* encodes the SOURCE
+    (SRC_FRAMES frames) and emits one BOS decode — it does NOT run S target
+    tokens; *decode* runs the decoder only (self + cross attention)."""
+    m = cfg.model
+    _, dec_active, enc_params = _param_components(cfg)
+    H, Dh = m.n_heads, m.resolved_head_dim
+    S, B = shape.seq_len, shape.global_batch
+    encdec = bool(m.n_enc_layers)
+
+    dec_ctxs = [c for c in _attn_context_lengths(cfg, S)][m.n_enc_layers:]
+    enc_self = 2.0 * B * H * Dh * SRC_FRAMES * SRC_FRAMES \
+        * m.n_enc_layers if encdec else 0.0     # bidirectional (no halving)
+
+    if shape.kind == "train":
+        tokens = B * S
+        attn_fwd = sum(2.0 * B * H * Dh * S * c for c in dec_ctxs)
+        cross_fwd = 4.0 * B * H * Dh * S * SRC_FRAMES * m.n_layers \
+            if encdec else 0.0                  # full (no causal halving)
+        return (6.0 * dec_active * tokens + 3.0 * (attn_fwd + cross_fwd) +
+                3.0 * (2.0 * enc_params * B * SRC_FRAMES + enc_self))
+
+    if shape.kind == "prefill":
+        if encdec:
+            # encode source + build cross-KV + one BOS decode step
+            return (2.0 * enc_params * B * SRC_FRAMES + enc_self +
+                    2.0 * dec_active * B)
+        tokens = B * S
+        attn_fwd = sum(2.0 * B * H * Dh * S * c for c in dec_ctxs)
+        return 2.0 * dec_active * tokens + attn_fwd
+
+    # decode: one token against a C-token cache, no causal halving
+    attn_step = sum(4.0 * B * H * Dh * c for c in dec_ctxs)
+    if encdec:
+        attn_step += 4.0 * B * H * Dh * SRC_FRAMES * m.n_layers  # cross
+    return 2.0 * dec_active * B + attn_step

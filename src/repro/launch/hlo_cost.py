@@ -1,0 +1,351 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` on the XLA:CPU backend
+(calibrated empirically, see EXPERIMENTS.md §Dry-run) reports PER-DEVICE
+numbers and counts every ``while`` body ONCE — a 61-layer scanned model
+under-reports FLOPs ~61x.  The roofline needs the real program, so we parse
+``compiled.as_text()`` ourselves:
+
+* build the computation call graph (entry -> while bodies / fusions / calls),
+* recover each while loop's trip count from its condition computation
+  (jax scans lower to ``compare(counter, constant(T)), direction=LT``),
+* propagate execution multiplicities down the graph,
+* count per-device FLOPs (dot/convolution, operand shapes resolved through
+  the SSA def map), HBM traffic (operands + outputs of every top-level op
+  outside fusion interiors — post-fusion, a fusion's boundary IS its HBM
+  traffic on TPU), and collective bytes by kind.
+
+All results are per-device; multiply by chip count for program totals.
+Validated against analytic ground truth in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# dtype -> bytes
+_DT = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"\bconstant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_KERNEL_WINDOW = re.compile(r"window=\{size=([\dx]+)")
+_FEATURE_GROUPS = re.compile(r"feature_group_count=(\d+)")
+_OPERAND_NAME = re.compile(r"%?([\w.\-]+)\s*$")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+# ops that move no HBM data themselves
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "add-dependency", "partition-id", "replica-id"}
+
+
+def _shapes_of(text: str) -> List[Tuple[int, Tuple[int, ...]]]:
+    """[(nbytes, dims)] for each shape literal in ``text``."""
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DT:
+            continue
+        dd = tuple(int(d) for d in dims.split(",")) if dims else ()
+        n = 1
+        for d in dd:
+            n *= d
+        out.append((n * _DT[dt], dd))
+    return out
+
+
+def _paren_group(s: str) -> Tuple[str, int]:
+    """Contents of the first balanced paren group and its end index."""
+    depth = 0
+    start = -1
+    for i, ch in enumerate(s):
+        if ch == "(":
+            if depth == 0:
+                start = i
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1:i], i
+    return "", -1
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [t for t in out if t]
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    text: str
+    out_bytes: int
+    out_dims: Tuple[int, ...]
+    operands: List[str] = field(default_factory=list)
+    calls: List[str] = field(default_factory=list)
+    body: Optional[str] = None
+    cond: Optional[str] = None
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    defs: Dict[str, Instr] = field(default_factory=dict)
+    max_const: int = 0  # trip-count recovery when used as a while condition
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR.match(line)
+    if m is None:
+        return None
+    name, rhs = m.group(1), m.group(2)
+
+    # strip a tuple output shape to find the opcode token
+    work = rhs
+    if work.startswith("("):
+        _, end = _paren_group(work)
+        work = work[end + 1:].lstrip()
+    om = re.match(r"^(?:\S+\s+)?([a-z][\w\-]*)\(", work)
+    opcode = om.group(1) if om else ""
+
+    # output shapes: text before the opcode's '('
+    k = rhs.find(opcode + "(") if opcode else -1
+    head = rhs[:k] if k >= 0 else rhs
+    tail = rhs[k + len(opcode):] if k >= 0 else ""
+    out_shapes = _shapes_of(head)
+    out_bytes = sum(b for b, _ in out_shapes)
+    out_dims = out_shapes[0][1] if out_shapes else ()
+
+    operands: List[str] = []
+    if tail.startswith("("):
+        inner, _ = _paren_group(tail)
+        for tok in _split_top(inner):
+            nm = _OPERAND_NAME.search(tok)
+            if nm:
+                operands.append(nm.group(1))
+
+    ins = Instr(name=name, opcode=opcode, text=rhs, out_bytes=out_bytes,
+                out_dims=out_dims, operands=operands)
+    cm = _CALLS.search(rhs)
+    if cm:
+        ins.calls.append(cm.group(1))
+    bm = _BODY.search(rhs)
+    if bm:
+        ins.body = bm.group(1)
+    dm = _COND.search(rhs)
+    if dm:
+        ins.cond = dm.group(1)
+    brm = _BRANCHES.search(rhs)
+    if brm:
+        for b in brm.group(1).split(","):
+            b = b.strip().lstrip("%")
+            if b:
+                ins.calls.append(b)
+    return ins
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        s = raw.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if s.endswith("{"):
+            hm = _COMP_HDR.match(s)
+            if hm:
+                cur = Computation(name=hm.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        ins = _parse_instr(s)
+        if ins is None:
+            continue
+        cur.instrs.append(ins)
+        cur.defs[ins.name] = ins
+        for c in _CONST_INT.findall(s):
+            cur.max_const = max(cur.max_const, int(c))
+    return comps, entry
+
+
+def _operand_bytes(comp: Computation, ins: Instr) -> int:
+    total = 0
+    for op in ins.operands:
+        d = comp.defs.get(op)
+        if d is not None:
+            total += d.out_bytes
+    return total
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = 1
+    for d in ins.out_dims:
+        out_elems *= d
+    if ins.opcode == "dot":
+        cm = _CONTRACT.search(ins.text)
+        k = 1
+        lhs = comp.defs.get(ins.operands[0]) if ins.operands else None
+        if cm and lhs is not None:
+            for i in (int(x) for x in cm.group(1).split(",") if x):
+                if i < len(lhs.out_dims):
+                    k *= lhs.out_dims[i]
+        return 2.0 * out_elems * k
+    if ins.opcode == "convolution":
+        wm = _KERNEL_WINDOW.search(ins.text)
+        ksize = 1
+        if wm:
+            for d in wm.group(1).split("x"):
+                ksize *= int(d)
+        fg = _FEATURE_GROUPS.search(ins.text)
+        groups = int(fg.group(1)) if fg else 1
+        lhs = comp.defs.get(ins.operands[0]) if ins.operands else None
+        cin = 1
+        if groups == 1 and lhs is not None and lhs.out_dims:
+            cin = lhs.out_dims[-1]
+        return 2.0 * out_elems * ksize * max(cin, 1)
+    return 0.0
+
+
+@dataclass
+class HloCost:
+    """Per-device totals (multiply by chips for the program)."""
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count_by_kind: Dict[str, int] = field(default_factory=dict)
+    while_trips: Dict[str, int] = field(default_factory=dict)
+    fusion_flops: float = 0.0   # flops inside fusion interiors (subset)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll_bytes_by_kind.values())
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "coll_bytes_by_kind": dict(self.coll_bytes_by_kind),
+            "coll_count_by_kind": dict(self.coll_count_by_kind),
+            "while_trips": dict(self.while_trips),
+        }
+
+
+def analyze(hlo_text: str) -> HloCost:
+    comps, entry = parse_module(hlo_text)
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    from collections import deque
+    mult: Dict[Tuple[str, bool], float] = {}
+    queue = deque([(entry, False, 1.0)])
+    seen_budget = 100_000
+    while queue and seen_budget:
+        seen_budget -= 1
+        name, in_fusion, m = queue.popleft()
+        key = (name, in_fusion)
+        mult[key] = mult.get(key, 0.0) + m
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.body is not None:
+                trips = 1
+                if ins.cond and ins.cond in comps:
+                    trips = max(1, comps[ins.cond].max_const)
+                cost.while_trips[ins.body] = trips
+                queue.append((ins.body, in_fusion, m * trips))
+            if ins.opcode == "fusion":
+                for c in ins.calls:
+                    queue.append((c, True, m))
+            elif ins.opcode in ("call", "conditional", "custom-call"):
+                for c in ins.calls:
+                    queue.append((c, in_fusion, m))
+            # reducers/sorters apply tiny lambdas — no dots inside; skip
+
+    for (name, in_fusion), m in mult.items():
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            fl = _dot_flops(comp, ins)
+            if fl:
+                cost.flops += m * fl
+                if in_fusion:
+                    cost.fusion_flops += m * fl
+            if in_fusion:
+                continue  # fusion interiors: on-chip, no HBM traffic
+            op = ins.opcode
+            if op in _FREE_OPS or not op or op == "while":
+                continue
+            if op.endswith("-done"):
+                continue
+            is_coll = next((k for k in COLLECTIVE_OPS if op.startswith(k)),
+                           None)
+            if is_coll:
+                b = float(max(ins.out_bytes, _operand_bytes(comp, ins)))
+                cost.coll_bytes_by_kind[is_coll] = \
+                    cost.coll_bytes_by_kind.get(is_coll, 0.0) + m * b
+                cost.coll_count_by_kind[is_coll] = \
+                    cost.coll_count_by_kind.get(is_coll, 0) + int(m)
+            cost.hbm_bytes += m * (ins.out_bytes + _operand_bytes(comp, ins))
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# collective time model: ring algorithms
+# ---------------------------------------------------------------------------
+
+_ALGO_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_seconds(coll_bytes_by_kind: Dict[str, float],
+                       link_bw: float) -> float:
+    """Per-device collective seconds under ring-algorithm cost factors.
+    Input bytes are per-device (the partitioned module's shard sizes)."""
+    t = 0.0
+    for kind, b in coll_bytes_by_kind.items():
+        t += _ALGO_FACTOR.get(kind, 1.0) * b / link_bw
+    return t

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests and benches must keep seeing
+1 CPU device; only the dry-run process forces 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod = 16x16 = 256 chips (v5e pod, ("data","model")); two pods
+    add a leading "pod" axis (DCN) => 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (used by §Perf sharding experiments)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_degraded_mesh(lost_data_slices: int = 1, *, multi_pod: bool = False):
+    """Elastic re-mesh after losing ``lost_data_slices`` rows of the data
+    axis (a failed host/board takes out a 16-chip model row).  The job
+    continues at reduced data-parallel width on the surviving devices —
+    no replacement hardware required."""
+    rows = (32 if multi_pod else 16) - lost_data_slices
+    if rows < 1:
+        raise ValueError("no data slices left")
+    devices = np.asarray(jax.devices()[: rows * 16]).reshape(rows, 16)
+    from jax.sharding import Mesh
+    return Mesh(devices, ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Top-HBM-ops / top-collectives profile of one dry-run cell — the
+'profiler' of the §Perf loop (there is no wall-clock trace on CPU; the
+lowered artifact is the profile).
+
+    PYTHONPATH=src python -m repro.launch.profile_cell --arch kimi-k2-1t-a32b \
+        --shape train_4k --variant '{"train": {"microbatch": 0}}' --top 15
+"""
+
+import argparse
+import json
+from collections import deque
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.distributed.context import DistContext
+from repro.launch import hlo_cost as HC
+from repro.launch.dryrun import build_program, run_cell
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.specs import input_specs
+
+
+def profile(arch: str, shape_name: str, variant=None, top: int = 15):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if variant:
+        if variant.get("train"):
+            cfg = cfg.with_overrides(
+                train=_dc.replace(cfg.train, **variant["train"]))
+        if variant.get("model"):
+            cfg = cfg.with_overrides(
+                model=_dc.replace(cfg.model, **variant["model"]))
+        if variant.get("flash_threshold") is not None:
+            from repro.models import layers as _L
+            _L.FLASH_THRESHOLD = variant["flash_threshold"]
+        if variant.get("q_chunk"):
+            from repro.models import layers as _L
+            _L.Q_CHUNK = variant["q_chunk"]
+        if variant.get("kv_chunk"):
+            from repro.models import layers as _L
+            _L.KV_CHUNK = variant["kv_chunk"]
+    if variant and variant.get("mesh_shape"):
+        mesh = make_mesh(variant["mesh_shape"],
+                         variant.get("mesh_axes", ("data", "model")))
+    else:
+        mesh = make_production_mesh()
+    ctx = DistContext.for_mesh(mesh, fsdp=cfg.sharding.fsdp)
+    structs, shardings = input_specs(cfg, shape, ctx)
+    prog = build_program(cfg, shape, ctx)
+    with mesh:
+        compiled = jax.jit(prog, in_shardings=tuple(
+            shardings[k] for k in structs)).lower(*structs.values()).compile()
+    comps, entry = HC.parse_module(compiled.as_text())
+
+    q = deque([(entry, False, 1.0)])
+    mult = {}
+    while q:
+        name, in_f, m = q.popleft()
+        mult[(name, in_f)] = mult.get((name, in_f), 0.0) + m
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.body is not None:
+                trips = max(1, comps[ins.cond].max_const) \
+                    if ins.cond in comps else 1
+                q.append((ins.body, in_f, m * trips))
+            if ins.opcode == "fusion":
+                for c in ins.calls:
+                    q.append((c, True, m))
+            elif ins.opcode in ("call", "conditional", "custom-call"):
+                for c in ins.calls:
+                    q.append((c, in_f, m))
+
+    rows, colls = [], []
+    for (name, in_f), m in mult.items():
+        comp = comps.get(name)
+        if comp is None or in_f:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in HC._FREE_OPS or not ins.opcode \
+                    or ins.opcode == "while" or ins.opcode.endswith("-done"):
+                continue
+            b = m * (ins.out_bytes + HC._operand_bytes(comp, ins))
+            rows.append((b, ins.opcode, ins.name[:50], name[:40], m))
+            if any(ins.opcode.startswith(k) for k in HC.COLLECTIVE_OPS):
+                colls.append((m * max(ins.out_bytes,
+                                      HC._operand_bytes(comp, ins)),
+                              ins.opcode, ins.name[:50], m))
+    rows.sort(reverse=True)
+    colls.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total HBM traffic: {total/1e12:.2f} TB/device")
+    print(f"top {top} HBM ops:")
+    for b, op, iname, cname, m in rows[:top]:
+        print(f"  {b/1e9:9.1f} GB m={m:5.0f} {op:14s} {iname:50s} {cname}")
+    print(f"top {min(top, len(colls))} collectives:")
+    for b, op, iname, m in colls[:top]:
+        print(f"  {b/1e9:9.1f} GB m={m:5.0f} {op:18s} {iname}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    profile(args.arch, args.shape,
+            json.loads(args.variant) if args.variant else None, args.top)
+
+
+if __name__ == "__main__":
+    main()

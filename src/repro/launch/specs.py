@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct stand-ins + sharding assembly for every lowered program.
+
+``input_specs(arch_cfg, shape_spec)`` returns the exact kwargs the dry-run
+lowers ``train_step`` / ``prefill_step`` / ``serve_step`` against: weak-type
+correct, shardable, zero device allocation (everything is built with
+``jax.eval_shape``).
+
+Modality frontends are STUBS per the task spec: the audio/vlm cells receive
+precomputed frame/patch embeddings as inputs (``src_embeds`` /
+``patch_embeds``), not raw waveforms/pixels.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.context import DistContext
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+)
+from repro.models.registry import get_model
+from repro.optim import make_optimizer
+from repro.train.loop import init_iv, iv_step_sizes
+
+# Modality-stub geometry (backbone-only cells)
+SRC_FRAMES = 512       # seamless: pre-encoded audio frames per sample
+N_PATCHES = 256        # qwen2-vl: vision patches per sample
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / state structs (no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    m = cfg.model
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "targets": _sds((B, S), jnp.int32),
+    }
+    if m.n_enc_layers:
+        batch["src_embeds"] = _sds((B, SRC_FRAMES, m.frontend_dim),
+                                   jnp.float32)
+    if m.patch_dim:
+        batch["patch_embeds"] = _sds((B, N_PATCHES, m.patch_dim), jnp.float32)
+        if m.m_rope:
+            batch["positions"] = _sds((B, S + N_PATCHES, 3), jnp.int32)
+    return batch
+
+
+def state_struct(cfg: ArchConfig, global_batch: int):
+    """TrainState as ShapeDtypeStructs via eval_shape (no init on device)."""
+    model = get_model(cfg.model)
+    opt = make_optimizer(cfg.train, 100_000)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    params = jax.eval_shape(lambda k: model.init(cfg.model, k), key)
+    opt_state = jax.eval_shape(opt.init, params)
+    iv = jax.eval_shape(lambda: init_iv(cfg, global_batch))
+    return {"params": params, "opt": opt_state, "iv": iv}
+
+
+def params_struct(cfg: ArchConfig):
+    model = get_model(cfg.model)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: model.init(cfg.model, k), key)
+
+
+def cache_struct(cfg: ArchConfig, B: int, max_len: int):
+    model = get_model(cfg.model)
+    return jax.eval_shape(
+        lambda: model.make_decode_cache(cfg.model, B, max_len))
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shardings(ctx: DistContext, cfg: ArchConfig, state_st):
+    pspecs = param_specs(ctx, state_st["params"], cfg.sharding, cfg.model)
+    ospecs = opt_state_specs(ctx, state_st["params"], pspecs, cfg.train)
+    ivspecs = jax.tree_util.tree_map(lambda _: P(), state_st["iv"])
+    specs = {"params": pspecs, "opt": ospecs, "iv": ivspecs}
+    return _named(ctx.mesh, specs), specs
+
+
+def batch_shardings(ctx: DistContext, batch_st):
+    specs = batch_specs(ctx, batch_st)
+    return _named(ctx.mesh, specs), specs
+
+
+def cache_shardings(ctx: DistContext, cache_st):
+    specs = cache_specs(ctx, cache_st)
+    return _named(ctx.mesh, specs), specs
+
+
+# ---------------------------------------------------------------------------
+# the public entry: one call per dry-run cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, ctx: DistContext):
+    """(kwargs structs, in_shardings kwargs tree) for the cell's program.
+
+    train   -> step(state, batch)
+    prefill -> prefill(params, batch)
+    decode  -> serve_step(params, cache, token)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        state_st = state_struct(cfg, B)
+        bat_st = batch_struct(cfg, B, S)
+        st_sh, _ = state_shardings(ctx, cfg, state_st)
+        b_sh, _ = batch_shardings(ctx, bat_st)
+        return {"state": state_st, "batch": bat_st}, \
+               {"state": st_sh, "batch": b_sh}
+    if shape.kind == "prefill":
+        p_st = params_struct(cfg)
+        bat_st = batch_struct(cfg, B, S)
+        bat_st.pop("targets")
+        pspecs = param_specs(ctx, p_st, cfg.sharding, cfg.model)
+        p_sh = _named(ctx.mesh, pspecs)
+        b_sh, _ = batch_shardings(ctx, bat_st)
+        return {"params": p_st, "batch": bat_st}, \
+               {"params": p_sh, "batch": b_sh}
+    if shape.kind == "decode":
+        p_st = params_struct(cfg)
+        c_st = cache_struct(cfg, B, S)
+        tok = _sds((B,), jnp.int32)
+        pspecs = param_specs(ctx, p_st, cfg.sharding, cfg.model)
+        p_sh = _named(ctx.mesh, pspecs)
+        c_sh, _ = cache_shardings(ctx, c_st)
+        t_sh = NamedSharding(ctx.mesh, P(None))
+        return {"params": p_st, "cache": c_st, "token": tok}, \
+               {"params": p_sh, "cache": c_sh, "token": t_sh}
+    raise ValueError(shape.kind)

@@ -1,0 +1,226 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The modality frontend is a STUB per the task spec: ``batch['src_embeds']``
+carries precomputed frame embeddings (B, S_src, frontend_dim) which are
+projected into the model width.  Encoder layers are bidirectional; decoder
+layers are causal self-attention + cross-attention to the encoder memory.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import dense_init, dense, rmsnorm_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": L.attn_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "ffn": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                              bias=cfg.use_bias)}
+
+
+def dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": L.attn_init(ks[0], cfg, dtype),
+            "ln_x": rmsnorm_init(cfg.d_model, dtype),
+            "xattn": L.attn_init(ks[1], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "ffn": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                              bias=cfg.use_bias)}
+
+
+def enc_block_apply(p, cfg, x, positions):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, _ = L.attn_apply(p["attn"], cfg, h, positions, window=0,
+                               causal=False)
+    x = x + attn_out
+    x = x + L.mlp_apply(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x
+
+
+def _cross_kv(p, cfg, memory):
+    """Precompute cross-attention K/V from encoder memory (no rope)."""
+    B, Ss, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = dense(p["xattn"]["wk"], memory).reshape(B, Ss, cfg.n_kv_heads, hd)
+    v = dense(p["xattn"]["wv"], memory).reshape(B, Ss, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(p["xattn"]["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def _cross_attend(p, cfg, x, mem_k, mem_v):
+    """Cross attention: queries from x (no rope), keys from memory."""
+    B, St, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(p["xattn"]["wq"], x).reshape(B, St, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["xattn"]["q_norm"], q, cfg.norm_eps)
+    qpos = L.make_positions(B, St)
+    kpos = L.make_positions(B, mem_k.shape[1])
+    o = L.attention(q, mem_k, mem_v, qpos, kpos, window=0, causal=False,
+                    attn_softcap=cfg.attn_softcap)
+    return dense(p["xattn"]["wo"], o.reshape(B, St, -1))
+
+
+def dec_block_apply(p, cfg, x, positions, mem_k, mem_v):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, kv = L.attn_apply(p["attn"], cfg, h, positions, window=0)
+    x = x + attn_out
+    x = x + _cross_attend(p, cfg, rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                          mem_k, mem_v)
+    x = x + L.mlp_apply(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, kv
+
+
+def dec_block_decode(p, cfg, x, pos, k_cache, v_cache, mem_k, mem_v):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, k_cache, v_cache = L.attn_decode(p["attn"], cfg, h, pos,
+                                               k_cache, v_cache, window=0)
+    x = x + attn_out
+    x = x + _cross_attend(p, cfg, rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                          mem_k, mem_v)
+    x = x + L.mlp_apply(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    params = {
+        "src_proj": dense_init(ks[2], cfg.frontend_dim, cfg.d_model, dt,
+                               bias=True),
+        "enc_blocks": jax.vmap(lambda k: enc_block_init(k, cfg, dt))(enc_keys),
+        "enc_norm": rmsnorm_init(cfg.d_model, dt),
+        "embed": L.embed_init(ks[3], cfg.vocab_size, cfg.d_model, dt),
+        "dec_blocks": jax.vmap(lambda k: dec_block_init(k, cfg, dt))(dec_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[4], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def encode(params, cfg, src_embeds, ctx=None, *, remat=False):
+    x = dense(params["src_proj"],
+              src_embeds.astype(jnp.dtype(cfg.compute_dtype)))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    B, Ss, _ = x.shape
+    positions = L.make_positions(B, Ss)
+
+    def body(xc, p):
+        xc = enc_block_apply(p, cfg, xc, positions)
+        if ctx is not None:
+            xc = ctx.constrain_batch(xc)
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def train_loss(params, cfg, batch, ctx=None, *, remat: bool = True):
+    """batch: src_embeds (B,Ss,fd), tokens (B,St), targets (B,St)."""
+    memory = encode(params, cfg, batch["src_embeds"], ctx, remat=remat)
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, St = tokens.shape
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    positions = L.make_positions(B, St)
+
+    def body(xc, p):
+        xc, _ = dec_block_apply(p, cfg, xc, positions,
+                                *_cross_kv(p, cfg, memory))
+        if ctx is not None:
+            xc = ctx.constrain_batch(xc)
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    ce = T.chunked_ce(params, cfg, x, targets, batch.get("loss_mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params, cfg, batch, ctx=None, *, max_len=None):
+    """Encode source; build cross-KV cache and an empty self-KV cache.
+    Returns (BOS logits, cache)."""
+    memory = encode(params, cfg, batch["src_embeds"], ctx)
+    B = memory.shape[0]
+    max_len = max_len or memory.shape[1]
+
+    def kv_body(_, p):
+        return None, _cross_kv(p, cfg, memory)
+
+    _, (mem_k, mem_v) = jax.lax.scan(kv_body, None, params["dec_blocks"])
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    Ld = cfg.n_layers
+    cache = {
+        "mem_k": mem_k, "mem_v": mem_v,  # (L, B, Ss, KV, D)
+        "k": jnp.zeros((Ld, B, max_len, KV, D), mem_k.dtype),
+        "v": jnp.zeros((Ld, B, max_len, KV, D), mem_v.dtype),
+        "pos": jnp.int32(0),
+    }
+    # BOS step: decode token 0 logits from a zero-state decoder input
+    bos = jnp.zeros((B,), jnp.int32)
+    logits, cache = decode_step(params, cfg, cache, bos, ctx)
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, ctx=None):
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], jnp.dtype(cfg.compute_dtype))
+    pos = cache["pos"].astype(jnp.int32)
+
+    def body(xc, xs):
+        p, ck, cv, mk, mv = xs
+        xc, ck, cv = dec_block_decode(p, cfg, xc, pos, ck, cv, mk, mv)
+        return xc, (ck, cv)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["mem_k"], cache["mem_v"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache.update({"k": k_new, "v": v_new, "pos": pos + 1})
+    return logits, new_cache
+
+
+def make_decode_cache(cfg, batch_size: int, max_len: int, dtype=None,
+                      src_len: int = 0):
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    Ld = cfg.n_layers
+    B = batch_size
+    Ss = src_len or max_len
+    return {
+        "mem_k": jnp.zeros((Ld, B, Ss, KV, D), dt),
+        "mem_v": jnp.zeros((Ld, B, Ss, KV, D), dt),
+        "k": jnp.zeros((Ld, B, max_len, KV, D), dt),
+        "v": jnp.zeros((Ld, B, max_len, KV, D), dt),
+        "pos": jnp.int32(0),
+    }

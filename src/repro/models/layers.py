@@ -1,0 +1,419 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, GQA attention (direct +
+flash-chunked), SwiGLU MLP, embeddings.
+
+Conventions
+-----------
+* Pure functions over param pytrees (nested dicts of jnp arrays).
+* ``init_*`` takes a PRNG key and returns the param dict; the matching apply
+  function takes ``(params, ...)``.
+* Activations flow in ``compute_dtype``; params live in ``param_dtype``;
+  softmax/normalisation accumulate in fp32.
+* Attention layouts:  q ``(B, S, H, Dh)``,  k/v ``(B, S, KV, Dh)``.
+* ``window == 0`` means full (causal) attention; ``window > 0`` restricts
+  attention to keys with ``q_pos - k_pos < window``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Tunable chunking for the flash-style attention path (see EXPERIMENTS.md
+# §Perf — these are hillclimb knobs).
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+FLASH_THRESHOLD = 4096  # use direct attention at/below this many keys
+
+_NEG_INF = -2.0**30  # large-negative that is safe in bf16 accumulation
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.zeros((dim,), dtype)}  # (1 + scale) parameterisation
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B, S, H, Dh); positions (B, S) absolute positions."""
+    dt = x.dtype
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    cos = cos[:, :, None, :]  # (B, S, 1, half)
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(dt)
+
+
+# M-RoPE (Qwen2-VL): head_dim/2 frequency slots split into (t, h, w)
+# sections; each section rotates with its own position stream.
+MROPE_SECTIONS = (2, 3, 3)  # ratios; scaled to head_dim//2 at apply time
+
+
+def apply_mrope(x, positions3, theta: float, sections=MROPE_SECTIONS):
+    """x (B, S, H, Dh); positions3 (B, S, 3) = (t, h, w) positions."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # Build a per-slot position stream by selecting t/h/w per frequency slot.
+    sec_id = jnp.concatenate([
+        jnp.full((sz,), i, dtype=jnp.int32) for i, sz in enumerate(sizes)
+    ])  # (half,)
+    idx = jnp.broadcast_to(sec_id[None, None, :],
+                           positions3.shape[:2] + (half,))
+    pos = jnp.take_along_axis(positions3.astype(jnp.float32), idx, axis=-1)
+    # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Soft capping (gemma / grok)
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale):
+    """q (B,Sq,KV,G,D), k (B,Sk,KV,D) -> scores (B,KV,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _mask(qpos, kpos, window: int, causal: bool):
+    """qpos (B,Sq), kpos (B,Sk) -> bool (B,1,1,Sq,Sk). True = attend."""
+    q = qpos[:, None, None, :, None]
+    kk = kpos[:, None, None, None, :]
+    m = kk >= 0  # invalid (unwritten ring-buffer) slots carry kpos < 0
+    if causal:
+        m &= q >= kk
+    if window:
+        m &= (q - kk) < window
+    return m
+
+
+def attention_direct(q, k, v, qpos, kpos, *, window: int = 0,
+                     causal: bool = True, attn_softcap: float = 0.0):
+    """Reference/direct attention. q (B,Sq,H,D), k/v (B,Sk,KV,D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = _gqa_scores(qg, k, scale)
+    s = softcap(s, attn_softcap)
+    m = _mask(qpos, kpos, window, causal)
+    s = jnp.where(m, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)
+
+
+def attention_flash(q, k, v, qpos, kpos, *, window: int = 0,
+                    causal: bool = True, attn_softcap: float = 0.0,
+                    q_chunk: int = 0, kv_chunk: int = 0):
+    """Flash-style chunked attention: O(Sq*kv_chunk) live memory via an
+    online-softmax scan over KV chunks nested in a scan over Q chunks.
+
+    Pure-jnp formulation (no Pallas) so the SPMD partitioner can shard the
+    head and batch dims freely; this is the memory-safe path for 32k+ seqs.
+    """
+    q_chunk = q_chunk or Q_CHUNK
+    kv_chunk = kv_chunk or KV_CHUNK
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    # Pad to multiples (padding masked out via kpos = -inf sentinel).
+    pad_q = nq * q_chunk - Sq
+    pad_k = nk * kv_chunk - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad_q)), constant_values=0)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)), constant_values=-1)
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, KV, G, cq, D)
+    qp = qpos.reshape(B, nq, q_chunk).transpose(1, 0, 2)  # (nq, B, cq)
+    kc = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    # (nk, B, KV, ck, D)
+    vc = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    kp = kpos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)  # (nk, B, ck)
+
+    def q_step(_, q_in):
+        qi, qpi = q_in  # (B,KV,G,cq,D), (B,cq)
+
+        def kv_step(carry, kv_in):
+            m_prev, l_prev, acc = carry
+            ki, vi, kpi = kv_in  # (B,KV,ck,D), ..., (B,ck)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, attn_softcap)
+            msk = _mask_chunk(qpi, kpi, window, causal)
+            s = jnp.where(msk, s, _NEG_INF)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, qi.shape[3]), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qi.shape[3]), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qi.shape[3], D), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+        o = acc / jnp.maximum(l_f, 1e-37)[..., None]
+        return None, o  # (B,KV,G,cq,D)
+
+    _, o = jax.lax.scan(q_step, None, (qg, qp))
+    # o: (nq, B, KV, G, cq, D) -> (B, Sq, H, D)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, D)
+    return o[:, :Sq].astype(q.dtype)
+
+
+def _mask_chunk(qpos, kpos, window: int, causal: bool):
+    """qpos (B,cq), kpos (B,ck) -> (B,1,1,cq,ck)."""
+    q = qpos[:, None, None, :, None]
+    kk = kpos[:, None, None, None, :]
+    m = kk >= 0
+    if causal:
+        m &= q >= kk
+    if window:
+        m &= (q - kk) < window
+    return m
+
+
+def attention(q, k, v, qpos, kpos, *, window: int = 0, causal: bool = True,
+              attn_softcap: float = 0.0):
+    """Dispatch: direct attention for short contexts, flash for long."""
+    if k.shape[1] <= FLASH_THRESHOLD or q.shape[1] == 1:
+        return attention_direct(q, k, v, qpos, kpos, window=window,
+                                causal=causal, attn_softcap=attn_softcap)
+    return attention_flash(q, k, v, qpos, kpos, window=window, causal=causal,
+                           attn_softcap=attn_softcap)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.use_bias),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype, bias=cfg.use_bias),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype, bias=cfg.use_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def attn_qkv(p, cfg, x, positions, *, theta: float = 0.0):
+    """Project to q/k/v and apply rope.  positions: (B,S) or (B,S,3) m-rope.
+    ``theta`` overrides cfg.rope_theta (per-layer theta, gemma3-style)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    theta = theta or cfg.rope_theta
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.m_rope:
+        q = apply_mrope(q, positions, theta)
+        k = apply_mrope(k, positions, theta)
+    else:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_apply(p, cfg, x, positions, *, window: int = 0, causal: bool = True,
+               theta: float = 0.0):
+    """Full-sequence attention (train / prefill). Returns (y, (k, v))."""
+    q, k, v = attn_qkv(p, cfg, x, positions, theta=theta)
+    pos1 = positions[..., 0] if cfg.m_rope else positions
+    o = attention(q, k, v, pos1, pos1, window=window, causal=causal,
+                  attn_softcap=cfg.attn_softcap)
+    y = dense(p["wo"], o.reshape(x.shape[0], x.shape[1], -1))
+    return y, (k, v)
+
+
+def cache_kpos(pos, capacity: int, ring: bool):
+    """Absolute key positions held by a cache of ``capacity`` slots when the
+    current token sits at absolute position ``pos`` (traced scalar).
+
+    Ring caches (windowed layers) store position p at slot ``p % capacity``;
+    linear caches store p at slot p.  Unwritten slots get a negative kpos,
+    which the attention mask treats as invalid.
+    """
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    if ring:
+        return pos - jnp.mod(pos - j, capacity)
+    return jnp.where(j <= pos, j, -1)
+
+
+def attn_decode(p, cfg, x, pos, k_cache, v_cache, *, window: int = 0,
+                theta: float = 0.0):
+    """Single-token decode with in-place cache update.
+
+    x (B,1,d); pos scalar int32 (absolute position of the new token);
+    k_cache/v_cache (B,C,KV,Dh).  Windowed layers use ring caches
+    (C == window); full layers use linear caches (C == max seq).
+    Returns (y (B,1,d), k_cache', v_cache').
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(pos[None, None, None], (B, 1, 3)).astype(jnp.int32)
+    q, k, v = attn_qkv(p, cfg, x, positions, theta=theta)
+    C = k_cache.shape[1]
+    ring = window > 0 and C <= window
+    slot = jnp.mod(pos, C) if ring else jnp.minimum(pos, C - 1)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    kpos = jnp.broadcast_to(cache_kpos(pos, C, ring)[None, :], (B, C))
+    pos1 = positions[..., 0] if cfg.m_rope else positions
+    o = attention_direct(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                         pos1, kpos, window=window, causal=True,
+                         attn_softcap=cfg.attn_softcap)
+    return dense(p["wo"], o.reshape(B, 1, -1)), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, *, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], d_model, d_ff, dtype, bias=bias),
+        "up": dense_init(ks[1], d_model, d_ff, dtype, bias=bias),
+        "down": dense_init(ks[2], d_ff, d_model, dtype, bias=bias,
+                           scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp_apply(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype, scale: float = 0.02):
+    return {"table": _normal(key, (vocab, d_model), dtype, scale)}
+
+
+def embed(p, tokens, compute_dtype):
+    return p["table"][tokens].astype(compute_dtype)
+
+
+def unembed(p_embed, x, *, w_head=None, logit_softcap_v: float = 0.0):
+    """Project to vocab logits (fp32). Tied by default."""
+    w = w_head if w_head is not None else p_embed["table"].T
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    return softcap(logits, logit_softcap_v)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V) fp32, labels (B,S) int32. Returns mean NLL (fp32)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_positions(B: int, S: int):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))

@@ -1,0 +1,234 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-parallel training form
+plus exact recurrent decode.  Used directly by zamba2 and as the SSM half of
+hybrid stacks.
+
+Shapes (single group, n_groups=1):
+    d_inner = ssm_expand * d_model
+    H = cfg.ssm_heads, P = d_inner // H (head dim), N = cfg.ssm_state
+    x (B,S,H,P), dt (B,S,H), A (H,) < 0, Bm/Cm (B,S,N)
+
+Chunked SSD (chunk Q):
+    y = SSD(x*dt, dt*A, B, C)
+      = intra-chunk quadratic term + inter-chunk recurrent state passing.
+The inter-chunk state scan is a plain lax.scan (nc steps) — cheap relative to
+the intra-chunk matmuls and keeps HLO small.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, dense_init, dense, rmsnorm_init, rmsnorm
+
+SSD_CHUNK = 256
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": _normal(ks[1], (cfg.ssm_conv, conv_ch), dtype,
+                          1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) ∈ (-1, 0]
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype,
+                               scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    N = cfg.ssm_state
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * N], axis=-1)
+    return z, xbc, dt, (d_inner, H, N)
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time.  xbc (B,S,C); w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    acc = 0.0
+    for i in range(K):
+        acc = acc + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) * \
+            w[i][None, None, :].astype(jnp.float32)
+    return (acc + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x):
+    """x (..., Q) -> (..., Q, Q) cumulative sums: out[i, j] = sum_{j<s<=i} x[s]
+    for j <= i, -inf above the diagonal."""
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = SSD_CHUNK,
+                init_state=None, return_state: bool = False):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) (post-softplus), A (H,) negative,
+    Bm/Cm (B,S,N) shared across heads (single group).
+    Returns y (B,S,H,P) [, final_state (B,H,P,N)].
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]              # (B,nc,Q,H) log-decay
+    seg = jnp.cumsum(dA, axis=2)                   # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic within Q) --------------------------------
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)     # (B,nc,Q,Q)
+    M = scores[:, :, None, :, :] * Lmat                # (B,nc,H,Q,Q)
+    Mdt = M * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", Mdt,
+                         xc.astype(jnp.float32))
+
+    # ---- chunk boundary states ------------------------------------------
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)    # (B,nc,Q,H)
+    sx = xc.astype(jnp.float32) * (dtc * decay_to_end)[..., None]
+    chunk_states = jnp.einsum("bcqhp,bcqn->bchpn", sx, Bc)  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])            # (B,nc,H) total decay
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((Bb, H, P, N), jnp.float32))
+
+    def step(s, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        s_out = s      # state entering this chunk
+        s = s * dec[..., None, None] + st
+        return s, s_out
+
+    final_state, entry_states = jax.lax.scan(
+        step, s0, (chunk_states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # entry-state contribution at position q: exp(seg_q) * C_q . S_entry
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, entry_states) * \
+        jnp.exp(seg)[..., None]
+    y = y_intra + y_inter
+    y = y.reshape(Bb, nc * Q, H, P)[:, :S]
+    if return_state:
+        return y.astype(x.dtype), final_state
+    return y.astype(x.dtype)
+
+
+def mamba2_apply(p, cfg, x_in, *, return_state: bool = False,
+                 init_state=None, conv_init=None):
+    """Full-sequence mamba2 block: x_in (B,S,d) -> (y (B,S,d) [, cache]).
+
+    cache = {'ssm': (B,H,P,N) fp32, 'conv': (B,K-1,C)} for decode handoff.
+    """
+    Bb, S, d = x_in.shape
+    proj = dense(p["in_proj"], x_in)
+    z, xbc, dt_raw, (d_inner, H, N) = _split_proj(cfg, proj)
+    if conv_init is not None:
+        ext = jnp.concatenate([conv_init.astype(xbc.dtype), xbc], axis=1)
+        conv_out = _causal_conv(ext, p["conv_w"], p["conv_b"])[:, conv_init.shape[1]:]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x_in.dtype)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    P = d_inner // H
+    xh = xs.reshape(Bb, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if return_state:
+        y, state = ssd_chunked(xh, dt, A, Bm, Cm, init_state=init_state,
+                               return_state=True)
+    else:
+        y = ssd_chunked(xh, dt, A, Bm, Cm, init_state=init_state)
+
+    y = y + xh.astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bb, S, d_inner)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        K = p["conv_w"].shape[0]
+        tail = jnp.concatenate([conv_init, xbc], axis=1) if conv_init is not None else xbc
+        conv_cache = tail[:, -(K - 1):, :]
+        if conv_cache.shape[1] < K - 1:
+            conv_cache = jnp.pad(
+                conv_cache, ((0, 0), (K - 1 - conv_cache.shape[1], 0), (0, 0)))
+        return out, {"ssm": state, "conv": conv_cache}
+    return out
+
+
+def mamba2_decode(p, cfg, x_in, cache):
+    """Single-token recurrent step: x_in (B,1,d), cache {'ssm','conv'}."""
+    Bb = x_in.shape[0]
+    proj = dense(p["in_proj"], x_in[:, 0, :])
+    z, xbc, dt_raw, (d_inner, H, N) = _split_proj(cfg, proj)
+
+    # conv ring: cache['conv'] (B, K-1, C) holds the previous K-1 inputs
+    K = p["conv_w"].shape[0]
+    conv_in = jnp.concatenate([cache["conv"],
+                               xbc[:, None, :].astype(cache["conv"].dtype)],
+                              axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x_in.dtype)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    P = d_inner // H
+    xh = xs.reshape(Bb, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                       # (B,H)
+    state = cache["ssm"] * dA[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bb, d_inner).astype(x_in.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype)
+    out = dense(p["out_proj"], y)[:, None, :]
+    new_cache = {"ssm": state,
+                 "conv": conv_in[:, 1:, :]}
+    return out, new_cache
+
+
+def make_mamba_cache(cfg, batch_size: int, dtype=jnp.float32):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    C = d_inner + 2 * N
+    return {"ssm": jnp.zeros((batch_size, H, d_inner // H, N), jnp.float32),
+            "conv": jnp.zeros((batch_size, K - 1, C), dtype)}

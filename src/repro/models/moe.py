@@ -1,0 +1,336 @@
+"""Mixture-of-Experts FFN: dropless top-k routing with sort + ragged_dot.
+
+Two execution paths sharing one parameterisation:
+
+* **local** (no mesh / tests): plain ragged_dot over the full expert stack.
+* **distributed** (`ctx.enabled`): a ``shard_map`` over ``(data, model)`` with
+  an *explicit* collective schedule — the per-layer FSDP all-gather of the
+  expert weights over ``data``, local routing/sort/grouped-matmul, and one
+  ``psum`` over ``model`` for the ff-sharded down projection.  Tokens never
+  cross data shards (routing is per-shard dropless), which keeps the a2a
+  traffic at zero for the baseline; an a2a EP variant is a §Perf experiment.
+
+Weight layout (logical):
+    gate/up : (E, d_model, moe_ff)   stored P(None, 'data', 'model')
+    down    : (E, moe_ff, d_model)   stored P(None, 'model', 'data')
+    router  : (d_model, E)           replicated, fp32 math
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, dense_init, dense, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg, dtype):
+    E, d, ff = cfg.n_experts, cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": _normal(ks[0], (d, E), jnp.float32, 1.0 / math.sqrt(d))},
+        "gate": _normal(ks[1], (E, d, ff), dtype, 1.0 / math.sqrt(d)),
+        "up": _normal(ks[2], (E, d, ff), dtype, 1.0 / math.sqrt(d)),
+        "down": _normal(ks[3], (E, ff, d), dtype, 1.0 / math.sqrt(ff)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _route(x32, w_router, top_k: int):
+    """x32 (T, d) fp32 -> (weights (T,k) fp32, ids (T,k) int32, probs (T,E))."""
+    logits = x32 @ w_router
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    return weights, ids.astype(jnp.int32), probs
+
+
+CAPACITY_FACTOR = 1.25  # GShard-style slack over the perfectly-balanced load
+
+
+def _capacity(T: int, k: int, E: int, cf: float = CAPACITY_FACTOR) -> int:
+    """Static per-expert token capacity, rounded up to a multiple of 8."""
+    c = int(math.ceil(T * k * cf / E))
+    return max(8, -(-c // 8) * 8)
+
+
+def _moe_local_math(x, p, cfg, *, n_local: int = 0, owner_start=None):
+    """Routing + capacity-based grouped FFN.  Returns (y (T,d), aux dict).
+
+    Dispatch is sort + scatter into a static (E_local, C, d) buffer — the
+    classic GShard/Switch formulation.  Tokens beyond an expert's capacity C
+    are dropped (their routing weight contributes nothing); C has 25% slack
+    over the balanced load and the load-balance loss keeps routing
+    near-balanced.  (``jax.lax.ragged_dot`` was measured to lower to a DENSE
+    over-all-experts einsum — E/k times the useful FLOPs — so the capacity
+    formulation is the honest baseline; see EXPERIMENTS.md §Perf.)
+
+    Expert parallelism: when ``n_local`` is set, ``p`` holds only the
+    ``n_local`` experts starting at (traced) global id ``owner_start``; rows
+    routed elsewhere are masked out and the caller psums partial outputs
+    over the expert-parallel axis.
+    """
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    weights, ids, probs = _route(x.astype(jnp.float32), p["router"]["w"], k)
+
+    flat_ids = ids.reshape(-1)                       # (T*k,)
+    perm = jnp.argsort(flat_ids)                     # stable
+    sorted_ids = flat_ids[perm]
+    token_idx = perm // k                            # source token per row
+    xs = x[token_idx]                                # (T*k, d) sorted by expert
+
+    # rank of each routed row within its (global) expert group
+    group_sizes = jnp.bincount(flat_ids, length=E)
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_ids]
+
+    C = _capacity(T, k, E, getattr(cfg, 'moe_capacity', CAPACITY_FACTOR))
+    keep = rank < C
+    if n_local:
+        local_ids = sorted_ids - owner_start
+        keep &= (local_ids >= 0) & (local_ids < n_local)
+        e_rows = n_local
+    else:
+        local_ids = sorted_ids
+        e_rows = E
+    dest = jnp.where(keep, local_ids * C + rank, e_rows * C)  # overflow row
+
+    buf = jnp.zeros((e_rows * C + 1, d), x.dtype).at[dest].set(
+        xs * keep[:, None].astype(x.dtype))
+    h = buf[: e_rows * C].reshape(e_rows, C, d)
+
+    gate_w = p["gate"].astype(x.dtype)
+    up_w = p["up"].astype(x.dtype)
+    down_w = p["down"].astype(x.dtype)
+    g = jnp.einsum("ecd,edf->ecf", h, gate_w)
+    u = jnp.einsum("ecd,edf->ecf", h, up_w)
+    hh = (jax.nn.silu(g.astype(jnp.float32)) *
+          u.astype(jnp.float32)).astype(x.dtype)
+    y_ec = jnp.einsum("ecf,efd->ecd", hh, down_w).reshape(e_rows * C, d)
+
+    # gather back (dropped/foreign rows contribute zero), unsort, combine.
+    # Combine in the compute dtype with fp32 accumulation — materialising
+    # an fp32 (T, k, d) copy was ~12% of kimi's HBM traffic (§Perf B3).
+    ys_sorted = y_ec[jnp.minimum(dest, e_rows * C - 1)] * keep[:, None]
+    inv = jnp.argsort(perm)
+    ys = ys_sorted[inv].reshape(T, k, d)
+    y = jnp.einsum("tkd,tk->td", ys, weights.astype(ys.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # GShard-style load-balance aux loss terms (local; caller aggregates).
+    frac = jnp.mean(jax.nn.one_hot(flat_ids, E, dtype=jnp.float32), axis=0)
+    prob = jnp.mean(probs, axis=0)
+    lb = E * jnp.sum(frac * prob)
+    return y, {"lb_loss": lb}
+
+
+def moe_apply(p, cfg, x, ctx):
+    """x (B, S, d) -> (y (B, S, d), aux dict).  ``ctx`` is a DistContext."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+
+    if ctx is None or not ctx.enabled:
+        y, aux = _moe_local_math(xt, p, cfg)
+    else:
+        y, aux = _moe_shard_map(p, cfg, xt, ctx)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xt)
+    return y.reshape(B, S, d), aux
+
+
+def use_ep(cfg, ctx) -> bool:
+    """Expert parallelism applies when the expert count divides the model
+    axis (kimi: 384 % 16 == 0; grok's 8 experts < 16 shards fall back to
+    the TP/capacity path)."""
+    return (cfg.moe_impl in ("ep_a2a", "ep_token_a2a") and ctx is not None
+            and ctx.enabled and cfg.n_experts % ctx.tp_size == 0)
+
+
+def _moe_token_a2a_body(x_loc, p, cfg, maxis, n_local: int):
+    """True token-routed expert parallelism (§Perf B4, DeepSeek-style).
+
+    Tokens are sharded over (data x model); each routed (token, expert)
+    pair is SENT to the model rank owning the expert via all_to_all,
+    computed there, and sent back.  Versus the mask+psum EP baseline this
+    removes (a) the 16x-replicated dispatch bookkeeping (every rank used to
+    sort/scatter ALL the data-shard's tokens) and (b) the full-activation
+    psum over 'model' — the two dominant HBM/collective terms of the kimi
+    baseline.  Two capacity stages (send-side per destination rank,
+    recv-side per local expert) keep every buffer static.
+    """
+    t, d = x_loc.shape
+    E, k = cfg.n_experts, cfg.top_k
+    tp = E // n_local
+    cf = getattr(cfg, "moe_capacity", CAPACITY_FACTOR)
+    weights, ids, probs = _route(x_loc.astype(jnp.float32),
+                                 p["router"]["w"], k)
+
+    # ---- stage 1: group routed rows by destination rank ------------------
+    flat_ids = ids.reshape(-1)                        # (t*k,)
+    owner = flat_ids // n_local                       # dst model rank
+    perm = jnp.argsort(owner)
+    sorted_owner = owner[perm]
+    gs = jnp.bincount(owner, length=tp)
+    starts = jnp.cumsum(gs) - gs
+    rank1 = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_owner]
+    C_send = _capacity(t, k, tp, cf)
+    keep1 = rank1 < C_send
+    dest1 = jnp.where(keep1, sorted_owner * C_send + rank1, tp * C_send)
+
+    xs = x_loc[perm // k]                             # (t*k, d)
+    send = jnp.zeros((tp * C_send + 1, d), x_loc.dtype).at[dest1].set(
+        xs * keep1[:, None].astype(x_loc.dtype))[: tp * C_send]
+    local_eid = (flat_ids - owner * n_local)[perm] + 1   # 1-based; 0 = empty
+    send_eid = jnp.zeros((tp * C_send + 1,), jnp.int32).at[dest1].set(
+        jnp.where(keep1, local_eid, 0))[: tp * C_send]
+
+    # ---- exchange: rows travel to their expert's rank --------------------
+    recv = jax.lax.all_to_all(send.reshape(tp, C_send, d), maxis,
+                              split_axis=0, concat_axis=0, tiled=True)
+    recv_eid = jax.lax.all_to_all(send_eid.reshape(tp, C_send), maxis,
+                                  split_axis=0, concat_axis=0, tiled=True)
+    recv = recv.reshape(tp * C_send, d)
+    recv_eid = recv_eid.reshape(tp * C_send)
+
+    # ---- stage 2: dispatch received rows into local experts --------------
+    valid = recv_eid > 0
+    eid = jnp.where(valid, recv_eid - 1, n_local)
+    perm2 = jnp.argsort(eid)
+    sorted_eid = eid[perm2]
+    gs2 = jnp.bincount(eid, length=n_local + 1)
+    starts2 = (jnp.cumsum(gs2) - gs2)[:n_local + 1]
+    rank2 = jnp.arange(tp * C_send, dtype=jnp.int32) - starts2[sorted_eid]
+    C_loc = _capacity(tp * C_send, 1, n_local, cf)
+    keep2 = (rank2 < C_loc) & (sorted_eid < n_local)
+    dest2 = jnp.where(keep2, sorted_eid * C_loc + rank2, n_local * C_loc)
+
+    rows = recv[perm2]
+    buf = jnp.zeros((n_local * C_loc + 1, d), x_loc.dtype).at[dest2].set(
+        rows * keep2[:, None].astype(x_loc.dtype))[: n_local * C_loc]
+    h = buf.reshape(n_local, C_loc, d)
+
+    gate_w = p["gate"].astype(x_loc.dtype)
+    up_w = p["up"].astype(x_loc.dtype)
+    down_w = p["down"].astype(x_loc.dtype)
+    g = jnp.einsum("ecd,edf->ecf", h, gate_w)
+    u = jnp.einsum("ecd,edf->ecf", h, up_w)
+    hh = (jax.nn.silu(g.astype(jnp.float32)) *
+          u.astype(jnp.float32)).astype(x_loc.dtype)
+    y_e = jnp.einsum("ecf,efd->ecd", hh, down_w).reshape(n_local * C_loc, d)
+
+    # ---- inverse stage 2: back to recv-slot layout -----------------------
+    y_sorted2 = y_e[jnp.minimum(dest2, n_local * C_loc - 1)] * keep2[:, None]
+    y_recv = y_sorted2[jnp.argsort(perm2)]            # (tp*C_send, d)
+
+    # ---- exchange back: rows return to their source rank -----------------
+    y_back = jax.lax.all_to_all(y_recv.reshape(tp, C_send, d), maxis,
+                                split_axis=0, concat_axis=0, tiled=True)
+    y_rows = y_back.reshape(tp * C_send, d)
+
+    # ---- inverse stage 1: combine on the source rank ---------------------
+    ys_sorted = y_rows[jnp.minimum(dest1, tp * C_send - 1)] * keep1[:, None]
+    ys = ys_sorted[jnp.argsort(perm)].reshape(t, k, d)
+    y = jnp.einsum("tkd,tk->td", ys, weights.astype(ys.dtype),
+                   preferred_element_type=jnp.float32).astype(x_loc.dtype)
+
+    frac = jnp.mean(jax.nn.one_hot(flat_ids, E, dtype=jnp.float32), axis=0)
+    prob = jnp.mean(probs, axis=0)
+    lb = E * jnp.sum(frac * prob)
+    return y, {"lb_loss": lb}
+
+
+def _moe_shard_map(p, cfg, xt, ctx):
+    """Distributed MoE via shard_map over (batch_axes..., model).
+
+    Two schedules:
+    * **TP/capacity** (default): every rank holds all experts (ff sharded
+      over 'model'); ZeRO-3 re-gathers expert shards over 'data' per layer.
+    * **EP** (``moe_impl='ep_a2a'``): experts sharded over 'model' (E/tp per
+      rank), d sharded over 'data' for storage; per layer each rank gathers
+      only ITS experts over 'data', computes its owned tokens, and partial
+      outputs psum over 'model'.  This is the only recipe that fits 1T
+      params on 16 GB/chip (kimi); see DESIGN.md §5.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    baxes = ctx.batch_axes          # e.g. ('data',) or ('pod', 'data')
+    maxis = ctx.model_axis
+    fsdp = ctx.fsdp
+    ep = use_ep(cfg, ctx)
+
+    token_a2a = ep and cfg.moe_impl == "ep_token_a2a"
+
+    if ep:
+        gate_spec = P(maxis, baxes, None) if fsdp else P(maxis, None, None)
+        down_spec = P(maxis, None, baxes) if fsdp else P(maxis, None, None)
+        n_local = cfg.n_experts // ctx.tp_size
+    else:
+        gate_spec = P(None, baxes, maxis) if fsdp else P(None, None, maxis)
+        down_spec = P(None, maxis, baxes) if fsdp else P(None, maxis, None)
+        n_local = 0
+
+    # token layout: mask+psum EP and TP replicate tokens over 'model';
+    # token-a2a shards them over (data..., model) — 1/tp the bookkeeping.
+    x_spec = P(baxes + (maxis,), None) if token_a2a else P(baxes, None)
+
+    def body(x_loc, router_w, gate_w, up_w, down_w):
+        if fsdp:
+            # ZeRO-3 gather of this layer's expert shards over the data axes.
+            for ax in baxes:
+                gate_w = jax.lax.all_gather(gate_w, ax, axis=1, tiled=True)
+                up_w = jax.lax.all_gather(up_w, ax, axis=1, tiled=True)
+                down_w = jax.lax.all_gather(down_w, ax, axis=2, tiled=True)
+        sub = {"router": {"w": router_w}, "gate": gate_w, "up": up_w,
+               "down": down_w}
+        if token_a2a:
+            return _moe_token_a2a_body(x_loc, sub, cfg, maxis, n_local)
+        if ep:
+            owner_start = jax.lax.axis_index(maxis) * n_local
+            y, aux = _moe_local_math(x_loc, sub, cfg, n_local=n_local,
+                                     owner_start=owner_start)
+        else:
+            y, aux = _moe_local_math(x_loc, sub, cfg)
+        # EP: partial outputs from owned experts; TP: partial over ff shards.
+        y = jax.lax.psum(y, maxis)
+        return y, aux
+
+    def wrapped(*args):
+        y, aux = body(*args)
+        aux = {k: jax.lax.pmean(v, baxes + (maxis,)) for k, v in aux.items()}
+        return y, aux
+
+    return jax.shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=(x_spec, P(), gate_spec, gate_spec, down_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(xt, p["router"]["w"], p["gate"], p["up"], p["down"])
+
+
+def moe_param_specs(cfg, ctx):
+    """PartitionSpec pytree matching moe_init output."""
+    from jax.sharding import PartitionSpec as P
+    baxes = ctx.batch_axes
+    maxis = ctx.model_axis
+    fsdp = ctx.fsdp
+    specs = {
+        "router": {"w": P()},
+        "gate": P(None, baxes, maxis) if fsdp else P(None, None, maxis),
+        "up": P(None, baxes, maxis) if fsdp else P(None, None, maxis),
+        "down": P(None, maxis, baxes) if fsdp else P(None, maxis, None),
+    }
+    if cfg.n_shared_experts:
+        mspec = {"gate": {"w": P(None, maxis)}, "up": {"w": P(None, maxis)},
+                 "down": {"w": P(maxis, None)}}
+        specs["shared"] = mspec
+    return specs

@@ -1,0 +1,57 @@
+"""Model registry: one uniform API per architecture family.
+
+    model = get_model(cfg.model)
+    params = model.init(cfg.model, key)
+    loss, metrics = model.train_loss(params, cfg.model, batch, ctx)
+    logits, cache = model.prefill(params, cfg.model, batch, ctx)
+    logits, cache = model.decode_step(params, cfg.model, cache, token, ctx)
+    cache = model.make_decode_cache(cfg.model, B, max_len)
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.models import encdec, transformer, xlstm, zamba2
+
+
+def get_model(model_cfg) -> SimpleNamespace:
+    fam = model_cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        return SimpleNamespace(
+            init=transformer.init_lm,
+            train_loss=transformer.train_loss,
+            prefill=transformer.prefill,
+            decode_step=transformer.decode_step,
+            make_decode_cache=transformer.make_decode_cache,
+            module=mod,
+        )
+    if fam == "ssm":
+        return SimpleNamespace(
+            init=xlstm.init_lm,
+            train_loss=xlstm.train_loss,
+            prefill=xlstm.prefill,
+            decode_step=xlstm.decode_step,
+            make_decode_cache=xlstm.make_decode_cache,
+            module=xlstm,
+        )
+    if fam == "hybrid":
+        return SimpleNamespace(
+            init=zamba2.init_lm,
+            train_loss=zamba2.train_loss,
+            prefill=zamba2.prefill,
+            decode_step=zamba2.decode_step,
+            make_decode_cache=zamba2.make_decode_cache,
+            module=zamba2,
+        )
+    if fam == "encdec":
+        return SimpleNamespace(
+            init=encdec.init_lm,
+            train_loss=encdec.train_loss,
+            prefill=encdec.prefill,
+            decode_step=encdec.decode_step,
+            make_decode_cache=encdec.make_decode_cache,
+            module=encdec,
+        )
+    raise ValueError(f"unknown family: {fam}")

@@ -1,0 +1,405 @@
+"""Decoder-only transformer family: dense (command-r, h2o-danube, gemma3),
+MoE (grok-1, kimi-k2) and the VLM backbone (qwen2-vl).
+
+Layer-pattern machinery
+-----------------------
+Architectures repeat a short *pattern* of heterogeneous layers (gemma3:
+5 sliding-window + 1 global; kimi: 1 dense + 60 MoE).  We scan over
+*super-blocks*: params are stacked ``(count, ...)`` per pattern position and
+the pattern is unrolled (statically) inside the scanned body.  This keeps the
+HLO at O(pattern) layers while supporting per-position static windows, RoPE
+thetas and FFN kinds — no traced control flow.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+
+LOSS_CHUNK = 2048  # sequence chunking for the CE loss (memory knob)
+
+
+class LayerDesc(NamedTuple):
+    window: int      # 0 = full attention
+    theta: float     # rope theta for this layer
+    moe: bool        # MoE FFN instead of dense MLP
+
+
+def derive_groups(cfg) -> Tuple[Tuple[int, Tuple[LayerDesc, ...]], ...]:
+    """(count, pattern) groups covering cfg.n_layers in order."""
+    n = cfg.n_layers
+    if cfg.n_experts:
+        fd = cfg.first_dense_layers
+        dense_d = LayerDesc(cfg.sliding_window, cfg.rope_theta, False)
+        moe_d = LayerDesc(cfg.sliding_window, cfg.rope_theta, True)
+        groups = []
+        if fd:
+            groups.append((fd, (dense_d,)))
+        groups.append((n - fd, (moe_d,)))
+        return tuple(groups)
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        local = LayerDesc(cfg.local_window, 10_000.0, False)
+        glob = LayerDesc(0, cfg.rope_theta, False)
+        pattern = (local,) * r + (glob,)
+        full, rem = divmod(n, r + 1)
+        groups = []
+        if full:
+            groups.append((full, pattern))
+        if rem:
+            groups.append((1, (local,) * rem))
+        return tuple(groups)
+    d = LayerDesc(cfg.sliding_window, cfg.rope_theta, False)
+    return ((n, (d,)),)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_block(key, cfg, desc: LayerDesc):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": L.attn_init(ks[0], cfg, dt),
+    }
+    if desc.moe:
+        p["ffn"] = M.moe_init(ks[1], cfg, dt)
+    else:
+        p["ffn"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt,
+                              bias=cfg.use_bias)
+    if not cfg.parallel_block:
+        p["ln2"] = L.rmsnorm_init(cfg.d_model, dt)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = L.rmsnorm_init(cfg.d_model, dt)
+        p["ln2_post"] = L.rmsnorm_init(cfg.d_model, dt)
+    return p
+
+
+def _ffn_apply(p, cfg, desc, h, ctx):
+    if desc.moe:
+        return M.moe_apply(p["ffn"], cfg, h, ctx)
+    return L.mlp_apply(p["ffn"], h), {}
+
+
+def block_apply(p, cfg, desc: LayerDesc, x, positions, ctx):
+    """Full-sequence block. Returns (x, (k, v), lb_aux)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, kv = L.attn_apply(p["attn"], cfg, h, positions,
+                                window=desc.window, theta=desc.theta)
+    if cfg.sandwich_norm:
+        attn_out = L.rmsnorm(p["ln1_post"], attn_out, cfg.norm_eps)
+    if cfg.parallel_block:
+        ffn_out, aux = _ffn_apply(p, cfg, desc, h, ctx)
+        x = x + attn_out + ffn_out
+    else:
+        x = x + attn_out
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        ffn_out, aux = _ffn_apply(p, cfg, desc, h2, ctx)
+        if cfg.sandwich_norm:
+            ffn_out = L.rmsnorm(p["ln2_post"], ffn_out, cfg.norm_eps)
+        x = x + ffn_out
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    return x, kv, aux.get("lb_loss", jnp.float32(0.0))
+
+
+def block_decode(p, cfg, desc: LayerDesc, x, pos, k_cache, v_cache, ctx):
+    """Single-token decode block. Returns (x, k_cache', v_cache')."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, k_cache, v_cache = L.attn_decode(
+        p["attn"], cfg, h, pos, k_cache, v_cache,
+        window=desc.window, theta=desc.theta)
+    if cfg.sandwich_norm:
+        attn_out = L.rmsnorm(p["ln1_post"], attn_out, cfg.norm_eps)
+    if cfg.parallel_block:
+        ffn_out, _ = _ffn_apply(p, cfg, desc, h, ctx)
+        x = x + attn_out + ffn_out
+    else:
+        x = x + attn_out
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        ffn_out, _ = _ffn_apply(p, cfg, desc, h2, ctx)
+        if cfg.sandwich_norm:
+            ffn_out = L.rmsnorm(p["ln2_post"], ffn_out, cfg.norm_eps)
+        x = x + ffn_out
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# LM init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg, key):
+    dt = _dtype(cfg)
+    groups = derive_groups(cfg)
+    keys = jax.random.split(key, len(groups) + 3)
+    params = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+              "final_norm": L.rmsnorm_init(cfg.d_model, dt)}
+    gp = []
+    for gi, (count, pattern) in enumerate(groups):
+        pkeys = jax.random.split(keys[gi + 1], len(pattern))
+        stacked = []
+        for j, desc in enumerate(pattern):
+            bkeys = jax.random.split(pkeys[j], count)
+            stacked.append(jax.vmap(lambda k: init_block(k, cfg, desc))(bkeys))
+        gp.append(stacked)
+    params["groups"] = gp
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(keys[-1], cfg.d_model, cfg.vocab_size,
+                                      dt)
+    if cfg.patch_dim:
+        params["patch_proj"] = L.dense_init(keys[-2], cfg.patch_dim,
+                                            cfg.d_model, dt, bias=True)
+    return params
+
+
+def embed_scale(cfg) -> float:
+    # gemma-style sqrt(d) embedding scaling rides the sandwich_norm flag.
+    return math.sqrt(cfg.d_model) if cfg.sandwich_norm else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, x, positions, ctx, *, remat: bool = False,
+            collect_cache: bool = False, cache_sizes=None):
+    """Scan super-blocks.  Returns (hidden, lb_loss_sum, caches|None).
+
+    ``cache_sizes``: per-layer cache capacity resolver — called as
+    ``cache_sizes(desc)`` to produce the ring/linear cache capacity when
+    ``collect_cache`` (prefill) is set.
+    """
+    groups = derive_groups(cfg)
+    lb_total = jnp.float32(0.0)
+    caches = [] if collect_cache else None
+
+    for gi, (count, pattern) in enumerate(groups):
+        stacked = params["groups"][gi]
+
+        def body(carry, xs, pattern=pattern):
+            xc, lb = carry
+            outs = []
+            for j, desc in enumerate(pattern):
+                xc, kv, lbj = block_apply(xs[j], cfg, desc, xc, positions, ctx)
+                lb = lb + lbj
+                if collect_cache:
+                    cap = cache_sizes(desc)
+                    outs.append(_pack_cache(kv, desc, cap))
+            return (xc, lb), (outs if collect_cache else None)
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, lb_total), ys = jax.lax.scan(body, (x, lb_total), stacked)
+        if collect_cache:
+            caches.append(ys)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, lb_total, caches
+
+
+def _pack_cache(kv, desc: LayerDesc, capacity: int):
+    """Arrange full-sequence (k, v) into a decode cache of ``capacity``."""
+    k, v = kv
+    B, S, KV, D = k.shape
+    if desc.window and capacity <= desc.window and S >= capacity:
+        # ring buffer: keep the last `capacity` tokens at slot p % capacity
+        idx = jnp.mod(jnp.arange(S - capacity, S), capacity)
+        ring_k = jnp.zeros((B, capacity, KV, D), k.dtype).at[:, idx].set(
+            k[:, S - capacity:])
+        ring_v = jnp.zeros((B, capacity, KV, D), v.dtype).at[:, idx].set(
+            v[:, S - capacity:])
+        return {"k": ring_k, "v": ring_v}
+    if S < capacity:
+        pad = capacity - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k, "v": v}
+    return {"k": k[:, :capacity], "v": v[:, :capacity]}
+
+
+def decode_forward(params, cfg, x, pos, cache, ctx):
+    """One-token scan over super-blocks with cache threading."""
+    groups = derive_groups(cfg)
+    new_groups = []
+    for gi, (count, pattern) in enumerate(groups):
+        stacked = params["groups"][gi]
+        cache_g = cache["groups"][gi]
+
+        def body(xc, xs, pattern=pattern):
+            ps, cs = xs
+            new_cs = []
+            for j, desc in enumerate(pattern):
+                xc, ck, cv = block_decode(ps[j], cfg, desc, xc, pos,
+                                          cs[j]["k"], cs[j]["v"], ctx)
+                new_cs.append({"k": ck, "v": cv})
+            return xc, new_cs
+
+        x, new_cache_g = jax.lax.scan(body, x, (stacked, cache_g))
+        new_groups.append(new_cache_g)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, {"groups": new_groups, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Heads and losses
+# ---------------------------------------------------------------------------
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T  # (d, V)
+    return params["head"]["w"]
+
+
+def logits_fn(params, cfg, hidden):
+    w = _head_weight(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", hidden.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    return L.softcap(logits, cfg.logit_softcap)
+
+
+def chunked_ce(params, cfg, hidden, targets, mask=None, chunk=LOSS_CHUNK):
+    """Cross-entropy without materialising (B, S, V) for the full sequence:
+    scan over S-chunks; inside the chunk the label log-prob is extracted with
+    an iota-compare-reduce (fuses under SPMD vocab sharding — no gather)."""
+    B, S, d = hidden.shape
+    V = cfg.vocab_size
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    w = _head_weight(params, cfg)
+
+    def chunk_fn(carry, xs):
+        tot, cnt = carry
+        h, t, m = xs
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        logits = L.softcap(logits, cfg.logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = jnp.sum(jnp.where(iota == t[..., None], logits, 0.0), axis=-1)
+        nll = (logz - ll) * m
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(chunk_fn), (jnp.float32(0.0), jnp.float32(0.0)),
+        (hc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Entry points (family API)
+# ---------------------------------------------------------------------------
+
+LB_COEF = 0.01  # MoE load-balance loss coefficient
+
+
+def _embed_inputs(params, cfg, batch, ctx):
+    """Token (+ optional patch) embedding. Returns (x, positions, loss_mask)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    x = x * embed_scale(cfg)
+    mask = batch.get("loss_mask")
+    if cfg.patch_dim and "patch_embeds" in batch:
+        patches = L.dense(params["patch_proj"],
+                          batch["patch_embeds"].astype(x.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+        Np = patches.shape[1]
+        pm = jnp.concatenate(
+            [jnp.zeros((B, Np), jnp.float32),
+             jnp.ones((B, tokens.shape[1]), jnp.float32)], axis=1)
+        mask = pm if mask is None else jnp.concatenate(
+            [jnp.zeros((B, Np), jnp.float32), mask], axis=1)
+    S = x.shape[1]
+    if cfg.m_rope:
+        positions = batch.get("positions")
+        if positions is None:
+            p1 = L.make_positions(B, S)
+            positions = jnp.stack([p1, p1, p1], axis=-1)
+    else:
+        positions = batch.get("positions", L.make_positions(B, S))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    return x, positions, mask
+
+
+def train_loss(params, cfg, batch, ctx=None, *, remat: bool = True):
+    """batch: tokens (B,S), targets (B,S) [, loss_mask, patch_embeds,
+    positions].  Returns (loss, metrics)."""
+    x, positions, mask = _embed_inputs(params, cfg, batch, ctx)
+    targets = batch["targets"]
+    if cfg.patch_dim and "patch_embeds" in batch:
+        # targets align with the text tail; pad front with ignored labels
+        Np = x.shape[1] - targets.shape[1]
+        targets = jnp.pad(targets, ((0, 0), (Np, 0)))
+    hidden, lb, _ = forward(params, cfg, x, positions, ctx, remat=remat)
+    ce = chunked_ce(params, cfg, hidden, targets, mask)
+    loss = ce + (LB_COEF * lb / max(cfg.n_layers, 1) if cfg.n_experts else 0.0)
+    return loss, {"ce": ce, "lb": lb}
+
+
+def prefill(params, cfg, batch, ctx=None, *, max_len: Optional[int] = None):
+    """Build a decode cache from a full prompt. Returns (last_logits, cache)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch, ctx)
+    S = x.shape[1]
+    max_len = max_len or S
+
+    def cache_sizes(desc: LayerDesc) -> int:
+        return min(desc.window, max_len) if desc.window else max_len
+
+    hidden, _, caches = forward(params, cfg, x, positions, ctx,
+                                collect_cache=True, cache_sizes=cache_sizes)
+    last = hidden[:, -1:, :]
+    logits = logits_fn(params, cfg, last)[:, 0]
+    cache = {"groups": caches, "pos": jnp.int32(S)}
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, ctx=None):
+    """One serving step: token (B,) int32 -> (logits (B,V), cache')."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None],
+                jnp.dtype(cfg.compute_dtype)) * embed_scale(cfg)
+    pos = cache["pos"].astype(jnp.int32)
+    hidden, cache = decode_forward(params, cfg, x, pos, cache, ctx)
+    logits = logits_fn(params, cfg, hidden)[:, 0]
+    return logits, cache
+
+
+def make_decode_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    """Zero-initialised cache sized for a decode cell (dry-run input spec)."""
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    groups = []
+    for count, pattern in derive_groups(cfg):
+        gs = []
+        for desc in pattern:
+            cap = min(desc.window, max_len) if desc.window else max_len
+            gs.append({
+                "k": jnp.zeros((count, batch_size, cap, KV, D), dt),
+                "v": jnp.zeros((count, batch_size, cap, KV, D), dt),
+            })
+        groups.append(gs)
+    return {"groups": groups, "pos": jnp.int32(0)}

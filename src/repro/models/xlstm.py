@@ -1,0 +1,478 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix-memory, chunkwise-parallel) and
+sLSTM (scalar-memory, inherently sequential) blocks in the paper's
+xLSTM[m:1] mix.
+
+mLSTM chunkwise recurrence (per head, stabilised exponential gating)
+--------------------------------------------------------------------
+state: C (Dk,Dv) = Σ decay · i_j · k_j v_jᵀ,  n (Dk),  m (stabiliser).
+Within a chunk with carry (C0, n0, m0):
+    b_i   = Σ_{s≤i} log f_s              (inclusive cumsum)
+    s_ij  = b_i − b_j + ĩ_j   (j ≤ i)    intra-chunk log weights
+    a_i   = b_i + m0                      carry-in log weight
+    m_i   = max(max_j s_ij, a_i)
+    h_i   = Σ_j e^{s_ij−m_i}(q_i·k_j)v_j + e^{a_i−m_i}(q_iᵀC0)
+    l_i   = Σ_j e^{s_ij−m_i}(q_i·k_j)   + e^{a_i−m_i}(q_i·n0)
+    y_i   = h_i / max(|l_i|, e^{−m_i})
+The sLSTM keeps recurrent weights on the hidden state and is computed with a
+lax.scan over time — per the paper, it is not parallelisable; that is the
+architectural trade the 7:1 mix makes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import _normal, dense_init, dense, rmsnorm_init, rmsnorm
+
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    i = jnp.arange(Q)
+    return jnp.where(i[:, None] >= i[None, :], diff, -jnp.inf)
+
+
+def mlstm_chunked(q, k, v, igate, fgate, chunk: int = MLSTM_CHUNK,
+                  init_state=None, return_state: bool = False):
+    """q/k/v (B,S,H,D); igate/fgate (B,S,H) log-space gates.
+    Returns y (B,S,H,D) [, state dict]."""
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(a, z4) for a in (q, k, v))
+        igate = jnp.pad(igate, z3, constant_values=-1e9)  # i=0 at pads
+        fgate = jnp.pad(fgate, z3)                        # logf=0: no decay
+
+    qc = q.reshape(B, nc, Q, H, D).transpose(1, 0, 3, 2, 4).astype(jnp.float32) * scale
+    kc = k.reshape(B, nc, Q, H, D).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, D).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    gi = igate.reshape(B, nc, Q, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    gf = fgate.reshape(B, nc, Q, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    # all chunked tensors: (nc, B, H, Q, ...)
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e9, jnp.float32)
+    else:
+        C0, n0, m0 = init_state["C"], init_state["n"], init_state["m"]
+
+    def body(carry, xs):
+        C, n, m = carry
+        qi, ki, vi, g, f = xs        # (B,H,Q,D) / (B,H,Q)
+        b = jnp.cumsum(f, axis=-1)   # (B,H,Q) inclusive
+        s = _segsum(f) + g[..., None, :]
+        # s_ij = (b_i - b_j) + g_j  -> shape (B,H,Q,Q)
+        a = b + m[..., None]         # (B,H,Q)
+        m_i = jnp.maximum(jnp.max(s, axis=-1), a)
+        m_i = jnp.maximum(m_i, -1e30)
+        Dm = jnp.exp(s - m_i[..., None])            # (B,H,Q,Q)
+        am = jnp.exp(a - m_i)                        # (B,H,Q)
+        qk = jnp.einsum("bhqd,bhkd->bhqk", qi, ki)   # (B,H,Q,Q)
+        wij = Dm * qk
+        h = jnp.einsum("bhqk,bhkd->bhqd", wij, vi) + \
+            am[..., None] * jnp.einsum("bhqd,bhdv->bhqv", qi, C)
+        l = jnp.sum(wij, axis=-1) + am * jnp.einsum("bhqd,bhd->bhq", qi, n)
+        y = h / jnp.maximum(jnp.abs(l), jnp.exp(-m_i))[..., None]
+
+        # chunk-boundary state update
+        bQ = b[..., -1]                                  # (B,H)
+        w_j = bQ[..., None] - b + g                      # (B,H,Q)
+        m_new = jnp.maximum(bQ + m, jnp.max(w_j, axis=-1))
+        old_scale = jnp.exp(bQ + m - m_new)              # (B,H)
+        wj = jnp.exp(w_j - m_new[..., None])             # (B,H,Q)
+        C_new = old_scale[..., None, None] * C + \
+            jnp.einsum("bhq,bhqd,bhqv->bhdv", wj, ki, vi)
+        n_new = old_scale[..., None] * n + \
+            jnp.einsum("bhq,bhqd->bhd", wj, ki)
+        return (C_new, n_new, m_new), y
+
+    (Cf, nf, mf), ys = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, gi, gf))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nc * Q, H, D)[:, :S]
+    if return_state:
+        return y.astype(q.dtype), {"C": Cf, "n": nf, "m": mf}
+    return y.astype(q.dtype)
+
+
+def mlstm_decode(q, k, v, igate, fgate, state):
+    """One step: q/k/v (B,H,D); gates (B,H) log-space."""
+    C, n, m = state["C"], state["n"], state["m"]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m_new = jnp.maximum(fgate + m, igate)
+    fs = jnp.exp(fgate + m - m_new)
+    is_ = jnp.exp(igate - m_new)
+    C = fs[..., None, None] * C + is_[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k, v)
+    n = fs[..., None] * n + is_[..., None] * k
+    h = jnp.einsum("bhd,bhdv->bhv", q, C)
+    l = jnp.einsum("bhd,bhd->bh", q, n)
+    y = h / jnp.maximum(jnp.abs(l), jnp.exp(-m_new))[..., None]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "up": dense_init(ks[0], d, 2 * d_inner, dtype),
+        "conv_w": _normal(ks[1], (cfg.ssm_conv, d_inner), dtype,
+                          1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[3], d_inner, d_inner, dtype),
+        "gates": dense_init(ks[4], d_inner, 2 * H, dtype, bias=True),
+        "mh_norm": rmsnorm_init(d_inner, dtype),
+        "skip": jnp.zeros((d_inner,), dtype),
+        "down": dense_init(ks[5], d_inner, d, dtype,
+                           scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _mlstm_qkvg(p, cfg, xm_conv, xm):
+    B, S, d_inner = xm.shape
+    H = cfg.n_heads
+    D = d_inner // H
+    q = dense(p["wq"], xm_conv).reshape(B, S, H, D)
+    k = dense(p["wk"], xm_conv).reshape(B, S, H, D)
+    v = xm.reshape(B, S, H, D)
+    g = dense(p["gates"], xm_conv).astype(jnp.float32)
+    ig, fg = jnp.split(g, 2, axis=-1)                 # (B,S,H)
+    fg = jax.nn.log_sigmoid(fg + 3.0)                 # bias toward remember
+    return q, k, v, ig, fg
+
+
+def mlstm_block_apply(p, cfg, x, *, return_state=False, cache=None):
+    from repro.models.mamba2 import _causal_conv
+    B, S, d = x.shape
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    up = dense(p["up"], h)
+    xm, z = jnp.split(up, 2, axis=-1)
+    if cache is not None:
+        ext = jnp.concatenate([cache["conv"].astype(xm.dtype), xm], axis=1)
+        conv = _causal_conv(ext, p["conv_w"], p["conv_b"])[:, cache["conv"].shape[1]:]
+    else:
+        conv = _causal_conv(xm, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    q, k, v, ig, fg = _mlstm_qkvg(p, cfg, conv, xm)
+    init_state = cache["state"] if cache is not None else None
+    if return_state:
+        y, state = mlstm_chunked(q, k, v, ig, fg, init_state=init_state,
+                                 return_state=True)
+    else:
+        y = mlstm_chunked(q, k, v, ig, fg, init_state=init_state)
+    d_inner = xm.shape[-1]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(p["mh_norm"], y, cfg.norm_eps)
+    y = y + p["skip"].astype(y.dtype) * conv
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = x + dense(p["down"], y)
+    if return_state:
+        K = p["conv_w"].shape[0]
+        tail = xm if cache is None else jnp.concatenate(
+            [cache["conv"].astype(xm.dtype), xm], axis=1)
+        conv_cache = tail[:, -(K - 1):, :]
+        if conv_cache.shape[1] < K - 1:
+            conv_cache = jnp.pad(conv_cache,
+                                 ((0, 0), (K - 1 - conv_cache.shape[1], 0),
+                                  (0, 0)))
+        return out, {"state": state, "conv": conv_cache}
+    return out
+
+
+def mlstm_block_decode(p, cfg, x, cache):
+    """x (B,1,d)."""
+    B, _, d = x.shape
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    up = dense(p["up"], h)[:, 0]
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_in = jnp.concatenate(
+        [cache["conv"], xm[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    conv = jax.nn.silu(conv).astype(x.dtype)
+    q, k, v, ig, fg = _mlstm_qkvg(p, cfg, conv[:, None, :], xm[:, None, :])
+    y, state = mlstm_decode(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0],
+                            cache["state"])
+    d_inner = xm.shape[-1]
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rmsnorm(p["mh_norm"], y, cfg.norm_eps)
+    y = y + p["skip"].astype(y.dtype) * conv
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = x + dense(p["down"], y)[:, None, :]
+    return out, {"state": state, "conv": conv_in[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    ff = int(math.ceil(4 * d / 3 / 64) * 64)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "conv_w": _normal(ks[0], (cfg.ssm_conv, d), dtype,
+                          1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((d,), dtype),
+        "w": dense_init(ks[1], d, 4 * d, dtype, bias=True),
+        "r": _normal(ks[2], (H, Dh, 4 * Dh), dtype, 1.0 / math.sqrt(Dh)),
+        "gn": rmsnorm_init(d, dtype),
+        "ffn": L.mlp_init(ks[3], d, ff, dtype),
+        "ffn_ln": rmsnorm_init(d, dtype),
+    }
+
+
+def _slstm_cell(carry, wx, r, H, Dh):
+    """carry: (c, n, m, h) each (B,H,Dh); wx (B,4d) pre-activations."""
+    c, n, m, h = carry
+    B = wx.shape[0]
+    rh = jnp.einsum("bhd,hdk->bhk", h, r.astype(h.dtype))  # (B,H,4Dh)
+    pre = wx.reshape(B, H, 4 * Dh) + rh
+    zt, it, ft, ot = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)                  # log f
+    m_new = jnp.maximum(lf + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    c = f_ * c + i_ * zt
+    n = f_ * n + i_
+    h_new = ot * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_scan(p, cfg, conv_out, init=None):
+    """conv_out (B,S,d) -> (h (B,S,d), final carry)."""
+    B, S, d = conv_out.shape
+    H = cfg.n_heads
+    Dh = d // H
+    wx = dense(p["w"], conv_out)                    # (B,S,4d)
+    if init is None:
+        z = jnp.zeros((B, H, Dh), jnp.float32)
+        init = (z, z, jnp.full((B, H, Dh), -1e9, jnp.float32), z)
+
+    def body(carry, wxt):
+        return _slstm_cell(carry, wxt, p["r"], H, Dh)
+
+    carry, hs = jax.lax.scan(body, init, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(conv_out.dtype)
+    return h, carry
+
+
+def slstm_block_apply(p, cfg, x, *, return_state=False, cache=None):
+    from repro.models.mamba2 import _causal_conv
+    B, S, d = x.shape
+    h0 = rmsnorm(p["ln"], x, cfg.norm_eps)
+    if cache is not None:
+        ext = jnp.concatenate([cache["conv"].astype(h0.dtype), h0], axis=1)
+        conv = _causal_conv(ext, p["conv_w"], p["conv_b"])[:, cache["conv"].shape[1]:]
+    else:
+        conv = _causal_conv(h0, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    init = cache["state"] if cache is not None else None
+    hs, carry = slstm_scan(p, cfg, conv, init)
+    hs = rmsnorm(p["gn"], hs, cfg.norm_eps)
+    x = x + hs
+    x = x + L.mlp_apply(p["ffn"], rmsnorm(p["ffn_ln"], x, cfg.norm_eps))
+    if return_state:
+        K = p["conv_w"].shape[0]
+        tail = h0 if cache is None else jnp.concatenate(
+            [cache["conv"].astype(h0.dtype), h0], axis=1)
+        cc = tail[:, -(K - 1):, :]
+        if cc.shape[1] < K - 1:
+            cc = jnp.pad(cc, ((0, 0), (K - 1 - cc.shape[1], 0), (0, 0)))
+        return x, {"state": carry, "conv": cc}
+    return x
+
+
+def slstm_block_decode(p, cfg, x, cache):
+    B, _, d = x.shape
+    h0 = rmsnorm(p["ln"], x, cfg.norm_eps)
+    conv_in = jnp.concatenate(
+        [cache["conv"], h0[:, 0][:, None, :].astype(cache["conv"].dtype)],
+        axis=1)
+    conv = jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    conv = jax.nn.silu(conv).astype(x.dtype)
+    hs, carry = slstm_scan(p, cfg, conv[:, None, :], cache["state"])
+    hs = rmsnorm(p["gn"], hs, cfg.norm_eps)
+    x = x + hs
+    x = x + L.mlp_apply(p["ffn"], rmsnorm(p["ffn_ln"], x, cfg.norm_eps))
+    return x, {"state": carry, "conv": conv_in[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# Full xLSTM LM
+# ---------------------------------------------------------------------------
+
+def derive_pattern(cfg) -> Tuple[Tuple[int, Tuple[str, ...]], ...]:
+    """Groups of (count, pattern) with 'm'/'s' block kinds, xLSTM[m:1]."""
+    n = cfg.n_layers
+    r = cfg.mlstm_ratio
+    if not r:
+        return ((n, ("m",)),)
+    P = r + 1
+    full, rem = divmod(n, P)
+    pattern = ("m",) * r + ("s",)
+    groups = []
+    if full:
+        groups.append((full, pattern))
+    if rem:
+        groups.append((1, ("m",) * rem))
+    return tuple(groups)
+
+
+def init_lm(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    groups = derive_pattern(cfg)
+    keys = jax.random.split(key, len(groups) + 2)
+    params = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+              "final_norm": rmsnorm_init(cfg.d_model, dt)}
+    gp = []
+    for gi, (count, pattern) in enumerate(groups):
+        pkeys = jax.random.split(keys[gi + 1], len(pattern))
+        stacked = []
+        for j, kind in enumerate(pattern):
+            bkeys = jax.random.split(pkeys[j], count)
+            init_fn = mlstm_block_init if kind == "m" else slstm_block_init
+            stacked.append(jax.vmap(lambda k: init_fn(k, cfg, dt))(bkeys))
+        gp.append(stacked)
+    params["groups"] = gp
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def _forward(params, cfg, x, ctx, *, remat=False, collect=False):
+    groups = derive_pattern(cfg)
+    caches = [] if collect else None
+    for gi, (count, pattern) in enumerate(groups):
+        stacked = params["groups"][gi]
+
+        def body(xc, xs, pattern=pattern):
+            outs = []
+            for j, kind in enumerate(pattern):
+                fn = mlstm_block_apply if kind == "m" else slstm_block_apply
+                if collect:
+                    xc, cache = fn(xs[j], cfg, xc, return_state=True)
+                    outs.append(cache)
+                else:
+                    xc = fn(xs[j], cfg, xc)
+            if ctx is not None:
+                xc = ctx.constrain_batch(xc)
+            return xc, (outs if collect else None)
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, stacked)
+        if collect:
+            caches.append(ys)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, caches
+
+
+def train_loss(params, cfg, batch, ctx=None, *, remat: bool = True):
+    tokens, targets = batch["tokens"], batch["targets"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    hidden, _ = _forward(params, cfg, x, ctx, remat=remat)
+    ce = T.chunked_ce(params, cfg, hidden, targets, batch.get("loss_mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params, cfg, batch, ctx=None, *, max_len=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    hidden, caches = _forward(params, cfg, x, ctx, collect=True)
+    logits = T.logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
+    return logits, {"groups": caches, "pos": jnp.int32(tokens.shape[1])}
+
+
+def decode_step(params, cfg, cache, token, ctx=None):
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], jnp.dtype(cfg.compute_dtype))
+    groups = derive_pattern(cfg)
+    new_groups = []
+    for gi, (count, pattern) in enumerate(groups):
+        stacked = params["groups"][gi]
+        cache_g = cache["groups"][gi]
+
+        def body(xc, xs, pattern=pattern):
+            ps, cs = xs
+            outs = []
+            for j, kind in enumerate(pattern):
+                fn = mlstm_block_decode if kind == "m" else slstm_block_decode
+                xc, c_new = fn(ps[j], cfg, xc, cs[j])
+                outs.append(c_new)
+            return xc, outs
+
+        x, ng = jax.lax.scan(body, x, (stacked, cache_g))
+        new_groups.append(ng)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)[:, 0]
+    return logits, {"groups": new_groups, "pos": cache["pos"] + 1}
+
+
+def make_decode_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = cfg.n_heads
+    K = cfg.ssm_conv
+    B = batch_size
+
+    def mcache(count):
+        D = d_inner // H
+        return {"state": {"C": jnp.zeros((count, B, H, D, D), jnp.float32),
+                          "n": jnp.zeros((count, B, H, D), jnp.float32),
+                          "m": jnp.full((count, B, H), -1e9, jnp.float32)},
+                "conv": jnp.zeros((count, B, K - 1, d_inner), dt)}
+
+    def scache(count):
+        Dh = d // H
+        z = jnp.zeros((count, B, H, Dh), jnp.float32)
+        return {"state": (z, z, jnp.full((count, B, H, Dh), -1e9,
+                                         jnp.float32), z),
+                "conv": jnp.zeros((count, B, K - 1, d), dt)}
+
+    groups = []
+    for count, pattern in derive_pattern(cfg):
+        groups.append([mcache(count) if kind == "m" else scache(count)
+                       for kind in pattern])
+    return {"groups": groups, "pos": jnp.int32(0)}

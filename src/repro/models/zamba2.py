@@ -1,0 +1,284 @@
+"""Zamba2 hybrid: a Mamba2 backbone with one *shared* full-attention block
+invoked every (hybrid_ratio+1)-th position.  The shared block's weights live
+once in HBM (the Zamba2 memory trick); each invocation applies its own
+low-rank (LoRA) delta, and the block input fuses the current hidden state
+with the original token embedding (concat + projection).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import _normal, dense_init, dense, rmsnorm_init, rmsnorm
+from repro.models.mamba2 import (mamba2_init, mamba2_apply, mamba2_decode,
+                                 make_mamba_cache)
+
+LORA_TARGETS = ("wq", "wk", "wv", "wo", "gate", "up", "down")
+
+
+def derive_pattern(cfg) -> Tuple[Tuple[int, Tuple[str, ...]], ...]:
+    n = cfg.n_layers
+    r = cfg.hybrid_ratio
+    if not (r and cfg.shared_attn):
+        return ((n, ("m",)),)
+    P = r + 1
+    full, rem = divmod(n, P)
+    groups = []
+    if full:
+        groups.append((full, ("m",) * r + ("A",)))
+    if rem:
+        groups.append((1, ("m",) * rem))
+    return tuple(groups)
+
+
+def n_attn_invocations(cfg) -> int:
+    return sum(count * pattern.count("A")
+               for count, pattern in derive_pattern(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block (+ LoRA deltas)
+# ---------------------------------------------------------------------------
+
+def shared_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "in_fuse": dense_init(ks[0], 2 * cfg.d_model, cfg.d_model, dtype),
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attn_init(ks[1], cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "ffn": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _lora_shapes(cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qkv_out = {"wq": cfg.n_heads * hd, "wk": cfg.n_kv_heads * hd,
+               "wv": cfg.n_kv_heads * hd}
+    shapes = {}
+    for t in LORA_TARGETS:
+        if t in qkv_out:
+            shapes[t] = (d, qkv_out[t])
+        elif t == "wo":
+            shapes[t] = (cfg.n_heads * hd, d)
+        elif t in ("gate", "up"):
+            shapes[t] = (d, cfg.d_ff)
+        else:  # down
+            shapes[t] = (cfg.d_ff, d)
+    return shapes
+
+
+def lora_init(key, cfg, dtype):
+    r = cfg.shared_attn_lora_rank
+    shapes = _lora_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    p = {}
+    for (t, (din, dout)), k in zip(shapes.items(), ks):
+        p[t] = {"a": _normal(k, (din, r), dtype, 1.0 / math.sqrt(din)),
+                "b": jnp.zeros((r, dout), dtype)}
+    return p
+
+
+def _lora_merge(shared, lora):
+    """Materialise effective block params = shared + a@b deltas."""
+    eff = jax.tree_util.tree_map(lambda x: x, shared)  # shallow-ish copy
+    for t in LORA_TARGETS:
+        delta = (lora[t]["a"] @ lora[t]["b"])
+        if t in ("wq", "wk", "wv", "wo"):
+            eff["attn"][t] = dict(eff["attn"][t])
+            eff["attn"][t]["w"] = eff["attn"][t]["w"] + delta
+        else:
+            eff["ffn"][t] = dict(eff["ffn"][t])
+            eff["ffn"][t]["w"] = eff["ffn"][t]["w"] + delta
+    return eff
+
+
+def shared_block_apply(shared, lora, cfg, x, x0, positions, *,
+                       collect_cache=False, cache_cap=0):
+    eff = _lora_merge(shared, lora)
+    fused = dense(eff["in_fuse"], jnp.concatenate([x, x0], axis=-1))
+    h = rmsnorm(eff["ln1"], fused, cfg.norm_eps)
+    attn_out, kv = L.attn_apply(eff["attn"], cfg, h, positions, window=0)
+    x = x + attn_out
+    h2 = rmsnorm(eff["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(eff["ffn"], h2)
+    if collect_cache:
+        desc = T.LayerDesc(0, cfg.rope_theta, False)
+        return x, T._pack_cache(kv, desc, cache_cap)
+    return x, None
+
+
+def shared_block_decode(shared, lora, cfg, x, x0, pos, k_cache, v_cache):
+    eff = _lora_merge(shared, lora)
+    fused = dense(eff["in_fuse"], jnp.concatenate([x, x0], axis=-1))
+    h = rmsnorm(eff["ln1"], fused, cfg.norm_eps)
+    attn_out, k_cache, v_cache = L.attn_decode(eff["attn"], cfg, h, pos,
+                                               k_cache, v_cache, window=0)
+    x = x + attn_out
+    h2 = rmsnorm(eff["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(eff["ffn"], h2)
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Full hybrid LM
+# ---------------------------------------------------------------------------
+
+def _mamba_block_init(key, cfg, dtype):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": mamba2_init(key, cfg, dtype)}
+
+
+def init_lm(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    groups = derive_pattern(cfg)
+    keys = jax.random.split(key, len(groups) + 3)
+    params = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+              "final_norm": rmsnorm_init(cfg.d_model, dt),
+              "shared": shared_block_init(keys[-2], cfg, dt)}
+    gp = []
+    for gi, (count, pattern) in enumerate(groups):
+        pkeys = jax.random.split(keys[gi + 1], len(pattern))
+        stacked = []
+        for j, kind in enumerate(pattern):
+            bkeys = jax.random.split(pkeys[j], count)
+            if kind == "m":
+                stacked.append(jax.vmap(
+                    lambda k: _mamba_block_init(k, cfg, dt))(bkeys))
+            else:
+                stacked.append(jax.vmap(lambda k: lora_init(k, cfg, dt))(bkeys))
+        gp.append(stacked)
+    params["groups"] = gp
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def _forward(params, cfg, x, positions, ctx, *, remat=False, collect=False,
+             cache_cap=0):
+    groups = derive_pattern(cfg)
+    x0 = x  # original embeddings feed every shared-attn invocation
+    caches = [] if collect else None
+    for gi, (count, pattern) in enumerate(groups):
+        stacked = params["groups"][gi]
+
+        def body(xc, xs, pattern=pattern):
+            outs = []
+            for j, kind in enumerate(pattern):
+                if kind == "m":
+                    h = rmsnorm(xs[j]["ln"], xc, cfg.norm_eps)
+                    if collect:
+                        y, c = mamba2_apply(xs[j]["mamba"], cfg, h,
+                                            return_state=True)
+                        outs.append(c)
+                    else:
+                        y = mamba2_apply(xs[j]["mamba"], cfg, h)
+                    xc = xc + y
+                else:
+                    xc, c = shared_block_apply(
+                        params["shared"], xs[j], cfg, xc, x0, positions,
+                        collect_cache=collect, cache_cap=cache_cap)
+                    if collect:
+                        outs.append(c)
+            if ctx is not None:
+                xc = ctx.constrain_batch(xc)
+            return xc, (outs if collect else None)
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, stacked)
+        if collect:
+            caches.append(ys)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, caches
+
+
+def train_loss(params, cfg, batch, ctx=None, *, remat: bool = True):
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    positions = L.make_positions(B, S)
+    hidden, _ = _forward(params, cfg, x, positions, ctx, remat=remat)
+    ce = T.chunked_ce(params, cfg, hidden, targets, batch.get("loss_mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params, cfg, batch, ctx=None, *, max_len=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    if ctx is not None:
+        x = ctx.constrain_batch(x)
+    positions = L.make_positions(B, S)
+    hidden, caches = _forward(params, cfg, x, positions, ctx, collect=True,
+                              cache_cap=max_len)
+    logits = T.logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
+    # decode path needs x0 at decode time: recomputed from the new token
+    return logits, {"groups": caches, "pos": jnp.int32(S)}
+
+
+def decode_step(params, cfg, cache, token, ctx=None):
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], jnp.dtype(cfg.compute_dtype))
+    x0 = x
+    pos = cache["pos"].astype(jnp.int32)
+    groups = derive_pattern(cfg)
+    new_groups = []
+    for gi, (count, pattern) in enumerate(groups):
+        stacked = params["groups"][gi]
+        cache_g = cache["groups"][gi]
+
+        def body(xc, xs, pattern=pattern):
+            ps, cs = xs
+            outs = []
+            for j, kind in enumerate(pattern):
+                if kind == "m":
+                    h = rmsnorm(ps[j]["ln"], xc, cfg.norm_eps)
+                    y, c_new = mamba2_decode(ps[j]["mamba"], cfg, h, cs[j])
+                    xc = xc + y
+                else:
+                    xc, ck, cv = shared_block_decode(
+                        params["shared"], ps[j], cfg, xc, x0, pos,
+                        cs[j]["k"], cs[j]["v"])
+                    c_new = {"k": ck, "v": cv}
+                outs.append(c_new)
+            return xc, outs
+
+        x, ng = jax.lax.scan(body, x, (stacked, cache_g))
+        new_groups.append(ng)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)[:, 0]
+    return logits, {"groups": new_groups, "pos": pos + 1}
+
+
+def make_decode_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def stack_cache(c, count):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), c)
+
+    groups = []
+    for count, pattern in derive_pattern(cfg):
+        gs = []
+        for kind in pattern:
+            if kind == "m":
+                gs.append(stack_cache(make_mamba_cache(cfg, batch_size, dt),
+                                      count))
+            else:
+                gs.append({"k": jnp.zeros((count, batch_size, max_len, KV, D),
+                                          dt),
+                           "v": jnp.zeros((count, batch_size, max_len, KV, D),
+                                          dt)})
+        groups.append(gs)
+    return {"groups": groups, "pos": jnp.int32(0)}

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import warmup_cosine  # noqa: F401

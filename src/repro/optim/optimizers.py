@@ -1,0 +1,219 @@
+"""Pure-JAX optimizers: AdamW (fp32 / bf16 / int8-quantised moments) and
+Adafactor (factored second moment — the only recipe that fits 1T params on a
+16 GB/chip pod).
+
+Interface (optax-flavoured, dependency-free):
+
+    opt = make_optimizer(train_plan, total_steps)
+    state = opt.init(params)
+    new_params, new_state, stats = opt.update(grads, state, params, step)
+
+Optimizer state is an ordinary pytree sharded like the params (ZeRO), so it
+participates in the IterPro recovery ladder like any other train-state leaf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedules import warmup_cosine
+
+QBLOCK = 256  # int8 moment quantisation block
+
+
+# ---------------------------------------------------------------------------
+# int8 moment quantisation (block-wise absmax)
+# ---------------------------------------------------------------------------
+
+def _q8(x32):
+    flat = x32.reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    q = jnp.round(fp / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(qs, shape):
+    fp = qs["q"].astype(jnp.float32) * qs["scale"]
+    n = 1
+    for s in shape:
+        n *= s
+    return fp.reshape(-1)[:n].reshape(shape)
+
+
+def _encode_moment(x32, dtype: str):
+    if dtype == "int8":
+        return _q8(x32)
+    return x32.astype(jnp.dtype(dtype))
+
+
+def _decode_moment(m, dtype: str, shape=None):
+    if dtype == "int8":
+        return _dq8(m, shape)
+    return m.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer container
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (params, state, stats)
+    name: str = "opt"
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr_fn, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          grad_clip=1.0, moment_dtype="float32"):
+    def init(params):
+        def zeros_like_m(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return _encode_moment(z, moment_dtype)
+        return {"m": jax.tree_util.tree_map(zeros_like_m, params),
+                "v": jax.tree_util.tree_map(zeros_like_m, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, gn = clip_by_global_norm(grads, grad_clip)
+        else:
+            gn = global_norm(grads)
+        lr = lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        is_q = moment_dtype == "int8"
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = _decode_moment(m, moment_dtype, p.shape)
+            v32 = _decode_moment(v, moment_dtype, p.shape)
+            m32 = b1 * m32 + (1 - b1) * g32
+            v32 = b2 * v32 + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            upd32 = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                upd32 = upd32 + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * upd32).astype(p.dtype)
+            return newp, _encode_moment(m32, moment_dtype), \
+                _encode_moment(v32, moment_dtype)
+
+        # tree_map over (grads, m, v, params) triples
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_p = jax.tree_util.tree_leaves(params)
+        if is_q:
+            # quantised moments have dict structure; walk the outer treedef
+            flat_m = tdef.flatten_up_to(state["m"])
+            flat_v = tdef.flatten_up_to(state["v"])
+        else:
+            flat_m = jax.tree_util.tree_leaves(state["m"])
+            flat_v = jax.tree_util.tree_leaves(state["v"])
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_m = tdef.unflatten([o[1] for o in outs])
+        new_v = tdef.unflatten([o[2] for o in outs])
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, optional first moment off)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr_fn, *, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, grad_clip=1.0, moment_dtype="bfloat16"):
+    """Adafactor without momentum.  Matrices (ndim>=2) get factored row/col
+    second-moment stats; vectors fall back to full stats.  Stat dtype is
+    configurable (bf16 halves an already-tiny footprint)."""
+
+    stat_dt = jnp.dtype(moment_dtype if moment_dtype != "int8" else "bfloat16")
+
+    def init(params):
+        def stats(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], stat_dt),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], stat_dt)}
+            return {"v": jnp.zeros(p.shape, stat_dt)}
+        return {"stats": jax.tree_util.tree_map(stats, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, gn = clip_by_global_norm(grads, grad_clip)
+        else:
+            gn = global_norm(grads)
+        lr = lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                vr = beta2 * s["vr"].astype(jnp.float32) + \
+                    (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"].astype(jnp.float32) + \
+                    (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                eps)[..., None])
+                u = g32 / jnp.maximum(denom, eps)
+                new_s = {"vr": vr.astype(stat_dt), "vc": vc.astype(stat_dt)}
+            else:
+                v = beta2 * s["v"].astype(jnp.float32) + (1 - beta2) * g2
+                u = g32 / jnp.maximum(jnp.sqrt(v), eps)
+                new_s = {"v": v.astype(stat_dt)}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_s = tdef.flatten_up_to(state["stats"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_s = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"stats": new_s}, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def make_optimizer(train_plan, total_steps: int = 100_000) -> Optimizer:
+    lr_fn = warmup_cosine(train_plan.learning_rate, train_plan.warmup_steps,
+                          total_steps)
+    if train_plan.optimizer == "adafactor":
+        return adafactor(lr_fn, weight_decay=0.0,
+                         grad_clip=train_plan.grad_clip,
+                         moment_dtype=train_plan.moment_dtype)
+    return adamw(lr_fn, weight_decay=train_plan.weight_decay,
+                 grad_clip=train_plan.grad_clip,
+                 moment_dtype=train_plan.moment_dtype)

@@ -1,0 +1,34 @@
+"""LR schedules as pure functions of a (traced) step scalar.
+
+The schedule position is one of the IterPro induction variables: it is kept
+as *independent* state (ICP) rather than re-derived from ``step``, so a
+corrupted schedule position is recoverable from any partner IV via Eq. (1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int,
+                  total_steps: int = 100_000, floor: float = 0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant(peak_lr: float, warmup_steps: int = 0):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        if warmup_steps:
+            return peak_lr * jnp.minimum(1.0, s / warmup_steps)
+        return jnp.full_like(s, peak_lr)
+
+    return lr

@@ -1,0 +1,6 @@
+from repro.train.loop import (  # noqa: F401
+    make_train_state,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)

@@ -1,0 +1,145 @@
+"""Train/serve step builders and the TrainState.
+
+TrainState = {
+    'params': model params,
+    'opt':    optimizer state (sharded like params),
+    'iv':     induction-variable block — the IterPro-protected loop state,
+}
+
+The ``iv`` block is the heart of the paper adaptation: each counter is
+updated *independently* (``x += s_x``) rather than derived from ``step`` —
+the Independent Compute Promotion (ICP) pass of the paper, applied to the
+training loop.  Because every counter is an affine function of the iteration
+index with known (init, step) — registered in ``core/induction.py`` — any
+single corrupted counter is recoverable from any healthy partner via the
+paper's Eq. (1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import get_model
+from repro.optim import make_optimizer
+
+
+def iv_step_sizes(arch_cfg, global_batch: int) -> Dict[str, int]:
+    """Per-IV (name -> step size); init values are all 0."""
+    n_micro = max(arch_cfg.train.microbatch, 1)
+    return {
+        "step": 1,
+        "data_offset": global_batch,   # sequences consumed
+        "rng_counter": 1,
+        "sched_pos": 1,
+        "micro_count": n_micro,
+    }
+
+
+def init_iv(arch_cfg, global_batch: int) -> Dict[str, jnp.ndarray]:
+    return {name: jnp.int32(0) for name in iv_step_sizes(arch_cfg,
+                                                         global_batch)}
+
+
+def advance_iv(iv, steps: Dict[str, int]):
+    """ICP: each counter advances by its own literal increment — no counter
+    is derived from another, so they are independent recovery partners."""
+    return {name: iv[name] + jnp.int32(steps[name]) for name in steps}
+
+
+def make_train_state(arch_cfg, key, global_batch: int = 0,
+                     total_steps: int = 100_000):
+    model = get_model(arch_cfg.model)
+    opt = make_optimizer(arch_cfg.train, total_steps)
+    params = model.init(arch_cfg.model, key)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "iv": init_iv(arch_cfg, global_batch or 256),
+    }
+
+
+def make_train_step(arch_cfg, ctx=None, global_batch: int = 0,
+                    total_steps: int = 100_000) -> Callable:
+    """Returns step(state, batch) -> (state', metrics). jit/pjit-ready."""
+    model = get_model(arch_cfg.model)
+    mcfg = arch_cfg.model
+    tp = arch_cfg.train
+    opt = make_optimizer(tp, total_steps)
+    remat = tp.remat != "none"
+    steps = iv_step_sizes(arch_cfg, global_batch or 256)
+    acc_dtype = jnp.dtype(tp.grad_reduce_dtype)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, mcfg, batch, ctx,
+                                         remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        n_micro = tp.microbatch
+
+        if n_micro and n_micro > 1:
+            def reshape(a):
+                B = a.shape[0]
+                assert B % n_micro == 0, (B, n_micro)
+                return a.reshape((n_micro, B // n_micro) + a.shape[1:])
+
+            mbatch = jax.tree_util.tree_map(reshape, batch)
+            gacc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+
+            def micro(carry, mbb):
+                gacc, lsum = carry
+                (loss, _), grads = grad_fn(params, mbb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dtype), gacc, grads)
+                return (gacc, lsum + loss), None
+
+            (grads, lsum), _ = jax.lax.scan(
+                micro, (gacc0, jnp.float32(0.0)), mbatch)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = lsum / n_micro
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_params, new_opt, stats = opt.update(
+            grads, state["opt"], params, state["iv"]["sched_pos"])
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "iv": advance_iv(state["iv"], steps),
+        }
+        out = {"loss": loss, **stats}
+        if isinstance(metrics, dict):
+            out.update({k: v for k, v in metrics.items()
+                        if isinstance(v, jnp.ndarray) or jnp.isscalar(v)})
+        return new_state, out
+
+    return train_step
+
+
+def make_prefill_step(arch_cfg, ctx=None, max_len: Optional[int] = None):
+    model = get_model(arch_cfg.model)
+    mcfg = arch_cfg.model
+
+    def prefill_step(params, batch):
+        return model.prefill(params, mcfg, batch, ctx, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(arch_cfg, ctx=None):
+    model = get_model(arch_cfg.model)
+    mcfg = arch_cfg.model
+
+    def decode_step(params, cache, token):
+        return model.decode_step(params, mcfg, cache, token, ctx)
+
+    return decode_step

@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward/train step and one prefill+decode on CPU, asserting output
+shapes and finiteness (the task's required smoke matrix)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, get_config
+from repro.data.pipeline import TokenPipeline
+from repro.models.registry import get_model
+from repro.train.loop import make_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, pipe, step=0):
+    batch = pipe.batch_at(step)
+    if cfg.model.n_enc_layers:
+        batch = pipe.with_src_embeds(batch, 16, cfg.model.frontend_dim, step)
+    if cfg.model.patch_dim:
+        batch = pipe.with_patches(batch, 8, cfg.model.patch_dim, step)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step(arch):
+    cfg = get_config(arch).smoke()
+    pipe = TokenPipeline(cfg.model.vocab_size, S, B, seed=0)
+    state = make_train_state(cfg, jax.random.PRNGKey(0), global_batch=B)
+    step = jax.jit(make_train_step(cfg, global_batch=B))
+    state2, metrics = step(state, _batch(cfg, pipe))
+    loss = float(metrics["loss"])
+    assert math.isfinite(loss) and loss > 0
+    # IVs advanced independently (ICP)
+    assert int(state2["iv"]["step"]) == 1
+    assert int(state2["iv"]["data_offset"]) == B
+    # optimizer state saw the gradients (params may not move at step 0:
+    # warmup lr starts at 0) — take a second step and check params moved
+    state3, _ = step(state2, _batch(cfg, pipe, 1))
+    changed = any(
+        not jnp.array_equal(a, b)
+        for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                        jax.tree_util.tree_leaves(state3["params"])))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode(arch):
+    cfg = get_config(arch).smoke()
+    m = cfg.model
+    model = get_model(m)
+    pipe = TokenPipeline(m.vocab_size, S, B, seed=0)
+    params = model.init(m, jax.random.PRNGKey(1))
+    batch = _batch(cfg, pipe)
+
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, m, b, None, max_len=S + 8))(params,
+                                                                  batch)
+    assert logits.shape == (B, m.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec = jax.jit(lambda p, c, t: model.decode_step(p, m, c, t, None))
+    for _ in range(3):
+        logits, cache = dec(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert logits.shape == (B, m.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_matches_prefill_continuation():
+    """Decoding token-by-token must agree with a longer prefill (cache
+    correctness), for the dense family."""
+    cfg = get_config("h2o-danube-1.8b").smoke()
+    m = cfg.model
+    model = get_model(m)
+    pipe = TokenPipeline(m.vocab_size, S, B, seed=3)
+    params = model.init(m, jax.random.PRNGKey(2))
+    toks = pipe.batch_at(0)["tokens"]          # (B, S)
+
+    # prefill on the first S-1 tokens, then decode the last token
+    short = {"tokens": toks[:, : S - 1]}
+    logits_s, cache = model.prefill(params, m, short, None, max_len=S + 4)
+    logits_d, _ = model.decode_step(params, m, cache, toks[:, S - 1], None)
+
+    full = {"tokens": toks}
+    logits_f, _ = model.prefill(params, m, full, None, max_len=S + 4)
+
+    assert jnp.allclose(logits_d, logits_f, atol=2e-4, rtol=2e-4), \
+        float(jnp.max(jnp.abs(logits_d - logits_f)))

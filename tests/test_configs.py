@@ -1,0 +1,70 @@
+"""Every assigned architecture must expose the EXACT config from the
+assignment table, plus the shape-applicability rules."""
+
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+
+# (arch, L, d_model, H, KV, d_ff, vocab)
+TABLE = {
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(TABLE))
+def test_assigned_hyperparams(arch):
+    m = get_config(arch).model
+    L, d, H, KV, ff, V = TABLE[arch]
+    assert m.n_layers == L
+    assert m.d_model == d
+    assert m.n_heads == H
+    assert m.n_kv_heads == KV
+    assert m.vocab_size == V
+    if arch == "kimi-k2-1t-a32b":
+        assert m.moe_d_ff == ff           # per-expert ff in the table
+        assert (m.n_experts, m.top_k) == (384, 8)
+    elif arch == "grok-1-314b":
+        assert m.d_ff == ff
+        assert (m.n_experts, m.top_k) == (8, 2)
+    elif arch == "xlstm-350m":
+        assert m.d_ff == ff               # 0: no separate FFN
+    else:
+        assert m.d_ff == ff
+
+
+def test_all_ten_assigned():
+    assert set(TABLE) == set(ASSIGNED_ARCHS)
+
+
+def test_special_flags():
+    assert get_config("zamba2-7b").model.ssm_state == 64
+    assert get_config("gemma3-1b").model.local_global_ratio == 5
+    assert get_config("gemma3-27b").model.local_global_ratio == 5
+    assert get_config("h2o-danube-1.8b").model.sliding_window > 0
+    assert get_config("qwen2-vl-7b").model.m_rope
+    assert get_config("seamless-m4t-large-v2").model.n_enc_layers == 24
+
+
+@pytest.mark.parametrize("arch", sorted(TABLE))
+def test_long500k_rule(arch):
+    """long_500k only for sub-quadratic archs (DESIGN.md §6)."""
+    cfg = get_config(arch)
+    runs = {s.name for s in cfg.shapes()}
+    subq = arch in ("xlstm-350m", "h2o-danube-1.8b", "gemma3-1b",
+                    "gemma3-27b", "zamba2-7b")
+    assert ("long_500k" in runs) == subq
+
+
+def test_smoke_configs_are_small():
+    for arch in list_archs():
+        sm = get_config(arch).smoke().model
+        assert sm.d_model <= 64 and sm.vocab_size <= 256

@@ -1,0 +1,70 @@
+"""Hypothesis property tests for the paper's Eq. (1) and the IV registry —
+the system invariants behind induction-variable recovery."""
+
+from hypothesis import given, settings, strategies as st
+
+import pytest
+
+from repro.core.induction import IVRegistry, IVSpec, RecoveryAbort
+
+steps = st.integers(min_value=-1000, max_value=1000).filter(lambda s: s != 0)
+inits = st.integers(min_value=-10**6, max_value=10**6)
+iters = st.integers(min_value=0, max_value=10**6)
+
+
+@given(i0=inits, si=steps, k0=inits, sk=steps, n=iters)
+@settings(max_examples=200, deadline=None)
+def test_eq1_roundtrip(i0, si, k0, sk, n):
+    """Eq. (1): recovering i from a healthy partner k at any iteration n
+    returns exactly i's true value — for any affine family, including
+    negative and non-unit steps."""
+    reg = IVRegistry({"i": (i0, si), "k": (k0, sk)})
+    k_val = k0 + n * sk
+    assert reg.eq1("i", "k", k_val) == i0 + n * si
+
+
+@given(i0=inits, si=steps, n=iters)
+@settings(max_examples=100, deadline=None)
+def test_iteration_of_inverse(i0, si, n):
+    spec = IVSpec("x", i0, si)
+    assert spec.iteration_of(spec.value_at(n)) == n
+
+
+@given(n=iters, bad_idx=st.integers(0, 4),
+       corrupt=st.integers(-10**9, 10**9))
+@settings(max_examples=200, deadline=None)
+def test_majority_diagnosis_repairs_single_corruption(n, bad_idx, corrupt):
+    """With >=3 IVs, one corrupted counter is identified and repaired from
+    the consensus iteration — the framework's extension of pairwise Eq. (1)."""
+    specs = {f"v{j}": (j * 3, j + 1) for j in range(5)}
+    reg = IVRegistry(specs)
+    values = {name: spec[0] + n * spec[1] for name, spec in specs.items()}
+    name = f"v{bad_idx}"
+    truth = values[name]
+    values[name] = corrupt
+    fixed, bad = reg.recover(values)
+    assert fixed[name] == truth
+    assert all(fixed[k] == specs[k][0] + n * specs[k][1] for k in specs)
+    if corrupt != truth:
+        assert bad == [name]
+
+
+@given(n=iters)
+@settings(max_examples=50, deadline=None)
+def test_no_consensus_aborts(n):
+    """Exact-or-abort: when no majority agrees, recovery must raise rather
+    than risk an SDC (the paper's §5.3.1 rule)."""
+    reg = IVRegistry({"a": (0, 1), "b": (0, 2), "c": (0, 3)})
+    # corrupt two of three -> no strict majority
+    values = {"a": n, "b": 2 * n + 7, "c": 3 * n + 11}
+    with pytest.raises(RecoveryAbort):
+        reg.recover(values)
+
+
+def test_icp_counts():
+    """Table-6 analogue: ICP creates recoverable IVs where none existed."""
+    from repro.configs import get_config
+    from repro.core.icp import recoverable_iv_count
+    cfg = get_config("iterpro-100m")
+    assert recoverable_iv_count(cfg, 256, icp_enabled=False) == 0
+    assert recoverable_iv_count(cfg, 256, icp_enabled=True) >= 5

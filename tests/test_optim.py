@@ -1,0 +1,94 @@
+"""Optimizer correctness: AdamW against a hand-rolled reference, Adafactor
+state shapes/factoring, int8 moment quantisation bounds, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainPlan
+from repro.optim import make_optimizer
+from repro.optim.schedules import warmup_cosine
+
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "b": jnp.zeros((4,))}
+
+
+def test_adamw_matches_reference():
+    plan = TrainPlan(optimizer="adamw", learning_rate=1e-2, warmup_steps=0,
+                     weight_decay=0.0, grad_clip=0.0)
+    opt = make_optimizer(plan, total_steps=100)
+    params = _params()
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+
+    new_params, new_state, _ = opt.update(grads, state, params, jnp.int32(0))
+
+    # reference: first Adam step with bias correction -> update = lr * 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = 0.1
+    v = 0.001
+    mh, vh = m / (1 - b1), v / (1 - b2)
+    lr = warmup_cosine(plan.learning_rate, 0, 100)(jnp.int32(0))
+    expect = np.asarray(params["w"]) - float(lr) * mh / (np.sqrt(vh) + eps)
+    np.testing.assert_allclose(np.asarray(new_params["w"]), expect,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_weight_decay_is_decoupled():
+    plan = TrainPlan(optimizer="adamw", learning_rate=1e-2, warmup_steps=0,
+                     weight_decay=0.1, grad_clip=0.0)
+    opt = make_optimizer(plan, total_steps=100)
+    params = _params()
+    state = opt.init(params)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_params, _, _ = opt.update(zeros, state, params, jnp.int32(0))
+    lr = float(warmup_cosine(plan.learning_rate, 0, 100)(jnp.int32(0)))
+    np.testing.assert_allclose(np.asarray(new_params["w"]),
+                               np.asarray(params["w"]) * (1 - lr * 0.1),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_adafactor_factored_shapes():
+    plan = TrainPlan(optimizer="adafactor")
+    opt = make_optimizer(plan, total_steps=100)
+    params = {"w": jnp.zeros((8, 4))}
+    state = opt.init(params)
+    stats = state["stats"]["w"]
+    assert stats["vr"].shape == (8,)
+    assert stats["vc"].shape == (4,)
+    grads = {"w": jnp.ones((8, 4))}
+    new_params, new_state, _ = opt.update(grads, state, params, jnp.int32(0))
+    assert new_params["w"].shape == (8, 4)
+    assert bool(jnp.isfinite(new_params["w"]).all())
+
+
+def test_int8_moments_bounded_error():
+    plan = TrainPlan(optimizer="adamw", moment_dtype="int8",
+                     learning_rate=1e-3, grad_clip=0.0)
+    opt = make_optimizer(plan, total_steps=100)
+    params = _params()
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
+    p1, s1, _ = opt.update(grads, state, params, jnp.int32(0))
+    # fp32 baseline
+    plan32 = TrainPlan(optimizer="adamw", moment_dtype="float32",
+                       learning_rate=1e-3, grad_clip=0.0)
+    opt32 = make_optimizer(plan32, total_steps=100)
+    p2, _, _ = opt32.update(grads, opt32.init(params), params, jnp.int32(0))
+    err = float(jnp.max(jnp.abs(p1["w"] - p2["w"])))
+    assert err < 5e-4, err   # one step of int8-moment noise stays tiny
+
+
+def test_schedule_warmup_and_decay():
+    sched = warmup_cosine(1.0, 10, 100)
+    lr0 = float(sched(jnp.int32(0)))
+    lr_mid = float(sched(jnp.int32(10)))
+    lr_end = float(sched(jnp.int32(99)))
+    assert lr0 < 0.2
+    assert abs(lr_mid - 1.0) < 1e-6
+    assert lr_end < 0.15
