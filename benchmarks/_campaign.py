@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -58,6 +59,7 @@ from repro.core import (
     trap_loss_spike,
     trap_nonfinite,
 )
+from repro.core.detect import LOSS_WINDOW
 from repro.data.pipeline import TokenPipeline
 from repro.train.loop import make_train_state, make_train_step
 
@@ -131,7 +133,8 @@ class Campaign:
         state = inject(self.states[t0], plan)
         canary = ChecksumCanary(self.states[t0], n_slices=canary_slices) \
             if use_canary else None
-        history = list(self.losses[:t0])
+        # bounded: the spike trap reads only the last LOSS_WINDOW losses
+        history = deque(self.losses[:t0], maxlen=LOSS_WINDOW)
 
         report = None
         s = t0
@@ -139,18 +142,17 @@ class Campaign:
             if s > t0:
                 micro.maybe_snapshot(s, state)
                 micro.record_iv(s, state["iv"])
-            if canary is not None:
-                report = canary.check(s, state)
-                if report is not None:
-                    break
             new_state, metrics = self.step(state, self.bfn(s))
             report = trap_nonfinite(s, metrics) or \
                 trap_loss_spike(s, metrics, history)
+            if report is None and canary is not None:
+                # fused rotating canary: ONE launch + ONE scalar sync —
+                # verify slice s%K of the (pre-step) state the step just
+                # consumed, arm slice (s+1)%K of its output
+                report = canary.check_and_arm(s, state, new_state)
             if report is not None:
                 break
             history.append(float(metrics["loss"]))
-            if canary is not None:
-                canary.arm(s, new_state)
             state = new_state
             s += 1
 

@@ -7,22 +7,31 @@ Ordered by cost:
      89.8% of crashes are SIGSEGV within ≤50 instructions transfers as:
      non-finite contamination within ≤2 steps).
   2. ``trap_loss_spike``  — free: order-of-magnitude loss jump.
-  3. ``checksum_canary``  — one HBM pass over a rotating 1/K slice of the
-     state (Pallas kernel): catches *dormant* corruption (e.g. a flipped
-     optimizer-moment bit that hasn't contaminated the loss yet), giving
-     full-state coverage every K steps at 1/K cost.
+  3. ``checksum_canary``  — one HBM pass over a rotating 2/K slice of the
+     state (a single fused Pallas launch; DESIGN.md §4.2): catches *dormant*
+     corruption (e.g. a flipped optimizer-moment bit that hasn't
+     contaminated the loss yet), giving full-state coverage every K steps.
+     The hot path costs exactly one kernel launch and one scalar
+     device→host sync per step, independent of the number of state leaves.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops as kops
+from repro.kernels import digest as kdigest
+from repro.kernels.ops import rotating_slice
+
+#: default window for the loss-spike trap; callers keep a bounded
+#: ``deque(maxlen=LOSS_WINDOW)`` history (unbounded lists grew without
+#: limit over long runs).
+LOSS_WINDOW = 8
 
 
 @dataclass
@@ -51,7 +60,8 @@ def trap_nonfinite(step: int, metrics: Dict) -> Optional[FaultReport]:
 
 
 def trap_loss_spike(step: int, metrics: Dict, history: Sequence[float],
-                    factor: float = 10.0, window: int = 8) -> Optional[FaultReport]:
+                    factor: float = 10.0,
+                    window: int = LOSS_WINDOW) -> Optional[FaultReport]:
     if len(history) < window:
         return None
     v = metrics.get("loss")
@@ -65,48 +75,166 @@ def trap_loss_spike(step: int, metrics: Dict, history: Sequence[float],
     return None
 
 
+# per-plan cache of the fused canary step functions.  Plans are global
+# singletons per state structure (kernels.digest._PLAN_CACHE), so every
+# ChecksumCanary instance over the same structure — e.g. one per campaign
+# trial — reuses the same compiled functions and never retraces.
+_FUSED_CACHE: Dict[Tuple[object, int, str, int], object] = {}
+
+
 class ChecksumCanary:
     """Rotating-slice checksum detector over a state subtree.
 
-    reference digests are refreshed after every *verified* step for the
-    slice just checked; a mismatch names the corrupted leaves exactly —
-    the Recovery Table key the runtime needs.
+    The reference digests live in an **on-device table** (n_leaves, 2);
+    ``check_and_arm`` verifies the step's check slice and refreshes the
+    next step's arm slice with a single fused Pallas launch, compares
+    digest tables device-side, and fetches exactly one scalar
+    "any mismatch?" flag.  Leaf attribution (the Recovery Table key the
+    runtime needs) walks the leaf-index map only on the fault path.
+
+    ``check``/``arm`` remain as standalone entry points for callers that
+    hold only one state version at a time; each is itself a single fused
+    launch (``arm`` syncs nothing).
     """
 
     def __init__(self, tree, n_slices: int = 4):
         self.n_slices = max(1, n_slices)
-        self.reference: Dict[str, np.ndarray] = kops.tree_checksums(tree)
-        self._keys = sorted(self.reference)
+        self.plan = kdigest.plan_for(tree)
+        self._keys: Tuple[str, ...] = self.plan.keys
+        #: on-device reference digest table, row i == digest of leaf
+        #: ``self._keys[i]``.
+        self.reference: jnp.ndarray = self.plan.digest_table(tree)
+
+    # -- slice geometry ----------------------------------------------------
+
+    def _slice_indices(self, step: int) -> List[int]:
+        return rotating_slice(step, self.n_slices, len(self._keys))
 
     def _slice_keys(self, step: int) -> List[str]:
-        r = step % self.n_slices
-        return [k for i, k in enumerate(self._keys) if i % self.n_slices == r]
+        return [self._keys[i] for i in self._slice_indices(step)]
 
-    def refresh(self, tree, keys: Optional[Sequence[str]] = None):
-        if keys is None:
-            self.reference = kops.tree_checksums(tree)
-            return
-        cur = kops.subtree_checksums(tree, keys)   # digest only the slice
-        self.reference.update(cur)
+    # -- fused step functions ---------------------------------------------
+
+    def _fused_fn(self, kind: str, r: int):
+        """jit'd (leaves, reference) -> (flag, bad_mask, new_reference).
+
+        kind 'check_arm': leaves = check-slice leaves + arm-slice leaves
+        (possibly from two state versions) packed into ONE digest launch;
+        'check': check slice only (reference unchanged); 'arm': arm slice
+        only (no comparison).
+        """
+        key = (self.plan, self.n_slices, kind, r)
+        fn = _FUSED_CACHE.get(key)
+        if fn is not None:
+            return fn
+        chk = self._slice_indices(r) if kind != "arm" else []
+        arm = self._slice_indices(r + 1) if kind != "check" else []
+        union = tuple(chk) + tuple(arm)
+        digest = self.plan.digest_fn(union)
+        chk_rows = np.asarray(chk, np.int32)
+        arm_rows = np.asarray(arm, np.int32)
+        nc = len(chk)
+
+        def step_fn(leaves, reference):
+            table = digest(leaves)              # ONE pallas launch
+            bad = jnp.any(table[:nc] != reference[chk_rows], axis=1) \
+                if nc else jnp.zeros((0,), bool)
+            new_ref = reference.at[arm_rows].set(table[nc:]) \
+                if len(arm) else reference
+            return jnp.any(bad), bad, new_ref
+
+        fn = jax.jit(step_fn)
+        _FUSED_CACHE[key] = fn
+        return fn
+
+    def _gather(self, tree, indices: Sequence[int]) -> List:
+        leaves = self.plan.leaves(tree)
+        return [leaves[i] for i in indices]
+
+    def _report(self, step: int, chk: Sequence[int], bad_mask) -> FaultReport:
+        # fault path only: fetch the per-leaf mismatch vector and attribute
+        mask = kdigest.fetch(bad_mask)
+        leaves = sorted(self._keys[i] for i, b in zip(chk, mask) if b)
+        return FaultReport(step, "checksum", leaves=leaves)
+
+    # -- hot path ----------------------------------------------------------
+
+    def check_and_arm(self, step: int, tree, armed_tree=None
+                      ) -> Optional[FaultReport]:
+        """The fused per-step canary: verify slice ``step % K`` of ``tree``
+        against the reference armed last step, and (re)digest slice
+        ``(step+1) % K`` of ``armed_tree`` (default: ``tree``) — one kernel
+        launch, one scalar host sync.
+
+        In a training loop call this after the step with
+        ``(pre_step_state, post_step_state)``: the check slice of the
+        pre-step state is the same buffer the previous step armed, and the
+        arm slice snapshots the fresh output the next check will verify.
+        """
+        if armed_tree is None:
+            armed_tree = tree
+        r = step % self.n_slices
+        chk = self._slice_indices(step)
+        leaves = self._gather(tree, chk) + \
+            self._gather(armed_tree, self._slice_indices(step + 1))
+        if not leaves:
+            return None
+        fn = self._fused_fn("check_arm", r)
+        kdigest.STATS.launches += 1
+        flag, bad, new_ref = fn(leaves, self.reference)
+        self.reference = new_ref
+        if bool(kdigest.fetch(flag)):       # the step's ONE host sync
+            return self._report(step, chk, bad)
+        return None
+
+    # -- compat / slow-path entry points ----------------------------------
 
     def check(self, step: int, tree) -> Optional[FaultReport]:
-        keys = self._slice_keys(step)
-        cur = kops.subtree_checksums(tree, keys)
-        bad = [k for k in keys
-               if not np.array_equal(cur.get(k), self.reference.get(k))]
-        if bad:
-            return FaultReport(step, "checksum", leaves=sorted(bad))
+        """Verify slice ``step % K`` only (single launch + scalar sync)."""
+        chk = self._slice_indices(step)
+        if not chk:
+            return None
+        fn = self._fused_fn("check", step % self.n_slices)
+        kdigest.STATS.launches += 1
+        flag, bad, _ = fn(self._gather(tree, chk), self.reference)
+        if bool(kdigest.fetch(flag)):
+            return self._report(step, chk, bad)
         return None
 
     def check_full(self, step: int, tree) -> Optional[FaultReport]:
-        bad = kops.verify_tree(tree, self.reference)
-        if bad:
-            return FaultReport(step, "checksum", leaves=bad)
+        """Verify every leaf (one launch; used off the rotating schedule)."""
+        table = self.plan.digest_table(tree)
+        bad = jnp.any(table != self.reference, axis=1)
+        if bool(kdigest.fetch(jnp.any(bad))):
+            return self._report(step, range(len(self._keys)), bad)
         return None
 
     def arm(self, step: int, tree) -> None:
         """End-of-step: digest the slice that ``check(step+1, ...)`` will
-        verify.  Together with ``check`` this is the 2/K-cost rotating
-        canary: corruption landing in the armed slice between two steps is
-        caught before the next step consumes it."""
-        self.refresh(tree, self._slice_keys(step + 1))
+        verify (single launch, no host sync).  Together with ``check`` this
+        is the rotating canary; ``check_and_arm`` fuses both into one
+        launch."""
+        arm = self._slice_indices(step + 1)
+        if not arm:
+            return
+        fn = self._fused_fn("arm", step % self.n_slices)
+        kdigest.STATS.launches += 1
+        _, _, self.reference = fn(self._gather(tree, arm), self.reference)
+
+    def refresh(self, tree, keys: Optional[Sequence[str]] = None) -> None:
+        """Re-digest the whole reference table (or the named leaves) —
+        called after a verified repair, off the hot path."""
+        if keys is None:
+            self.reference = self.plan.digest_table(tree)
+            return
+        idx = sorted(self.plan.index_of(k) for k in keys)
+        if not idx:
+            return
+        rows = np.asarray(idx, np.int32)
+        self.reference = self.reference.at[rows].set(
+            self.plan.digest_subset(tree, idx))
+
+    def reference_digests(self) -> Dict[str, np.ndarray]:
+        """Host copy of the reference table (debug/telemetry; one sync)."""
+        table = kdigest.fetch(self.reference)
+        return {k: table[i] for i, k in enumerate(self._keys)}

@@ -33,6 +33,7 @@ class Snapshot:
     step: int
     state: object
     digests: Dict[str, np.ndarray]
+    nbytes: int = 0                  # cached at snapshot time
     wall: float = field(default_factory=time.time)
 
 
@@ -63,8 +64,17 @@ class MicroCheckpointer:
         return True
 
     def snapshot(self, step: int, state) -> None:
-        snap = Snapshot(step=step, state=_host_copy(state),
-                        digests=kops.tree_checksums(state))
+        # ONE read of the live state: the host copy is the only
+        # device→host movement; digests are computed from that copy in a
+        # single fused launch and certify exactly the bytes stored.  (On a
+        # CPU backend the copy IS the digest input — zero extra movement.
+        # On TPU this re-uploads the copy for digesting; keeping the
+        # digest on the host DMA path is the ROADMAP buffer-reuse item.)
+        host = _host_copy(state)
+        snap = Snapshot(step=step, state=host,
+                        digests=kops.tree_checksums(host),
+                        nbytes=sum(leaf.nbytes for leaf in
+                                   jax.tree_util.tree_leaves(host)))
         self.snapshots.append(snap)
         if len(self.snapshots) > self.keep:
             self.snapshots.pop(0)
@@ -76,13 +86,13 @@ class MicroCheckpointer:
 
     def verify(self, snap: Snapshot) -> List[str]:
         """Digest-verify a snapshot before trusting it for replay
-        (exact-or-abort: a rotted snapshot must not silently replay)."""
+        (exact-or-abort: a rotted snapshot must not silently replay).
+        One fused digest launch over the whole snapshot."""
         return kops.verify_tree(snap.state, snap.digests)
 
     @property
     def memory_bytes(self) -> int:
-        total = 0
-        for s in self.snapshots:
-            for leaf in jax.tree_util.tree_leaves(s.state):
-                total += np.asarray(leaf).nbytes
-        return total
+        """Resident snapshot footprint — cached per snapshot at capture
+        time (the seed re-materialised every leaf with ``np.asarray`` on
+        each property read)."""
+        return sum(s.nbytes for s in self.snapshots)

@@ -44,6 +44,7 @@ from repro.core.recovery_table import (
     RecoveryTable,
 )
 from repro.core.replay import device_put_like, replay
+from repro.kernels import digest as kdigest
 from repro.kernels import ops as kops
 
 
@@ -296,16 +297,29 @@ def _leaf_by_key(tree, key: str):
     return found[0]
 
 
+_VERIFY_CACHE: Dict[object, Callable] = {}
+
+
 def _default_verify(state) -> List[str]:
-    """Non-finite scan over float leaves — names corrupt leaves."""
-    bad: List[str] = []
+    """Non-finite scan over float leaves — names corrupt leaves.
 
-    def visit(path, leaf):
-        arr = jnp.asarray(leaf)
-        if jnp.issubdtype(arr.dtype, jnp.floating):
-            if not bool(jnp.isfinite(arr).all()):
-                bad.append(kops.leaf_key(path))
-        return leaf
-
-    jax.tree_util.tree_map_with_path(visit, state)
-    return sorted(bad)
+    Fused like the digest engine (DESIGN.md §4.2): one jitted device pass
+    producing a per-leaf flag vector and ONE host transfer, instead of a
+    blocking ``isfinite().all()`` fetch per leaf.  The compiled scan is
+    cached per state structure, so repeated rung verifications never
+    retrace."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    keys = [kops.leaf_key(p) for p, _ in flat]
+    float_idx = [i for i, (_, x) in enumerate(flat)
+                 if jnp.issubdtype(jnp.result_type(x), jnp.floating)]
+    if not float_idx:
+        return []
+    sig = (treedef, tuple((jnp.shape(x), jnp.result_type(x).name)
+                          for _, x in flat))
+    fn = _VERIFY_CACHE.get(sig)
+    if fn is None:
+        fn = jax.jit(lambda leaves: jnp.stack(
+            [~jnp.isfinite(leaf).all() for leaf in leaves]))
+        _VERIFY_CACHE[sig] = fn
+    mask = kdigest.fetch(fn([flat[i][1] for i in float_idx]))
+    return sorted(keys[i] for i, b in zip(float_idx, mask) if b)

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the IterPro detection/redundancy hot path.
 
 checksum — blocked Fletcher digest (the ~free canary detector)
+digest   — fused single-launch whole-state digesting (DigestPlan: one
+           pallas_call + one host sync per canary check, DESIGN.md §4.2)
 vote     — bitwise TMR majority across replicas (replica repair)
 parity   — XOR parity fold / reconstruction (manufactured redundancy)
 
@@ -10,4 +12,5 @@ algorithms are bitwise/integer — tests assert bit-exact equality.
 Kernels run compiled on TPU, interpret=True elsewhere.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import digest, ops, ref  # noqa: F401
+from repro.kernels.digest import DigestPlan, plan_for  # noqa: F401

@@ -10,6 +10,18 @@ lane dim matches the VPU's native 128-lane registers.  Each grid step
 produces a (2,)-digest for its tile; tile digests are combined *exactly*
 into per-block digests by the ops wrapper (the weighted term needs a global
 offset correction: Σ(i+g)·x = Σi·x + g·Σx, all mod 2^32).
+
+Two entry points:
+
+* ``checksum_tiles`` — per-tile digests with *local* weights; the caller
+  applies the offset correction (legacy single-array path).
+* ``row_checksums``  — the fused-digest variant (DESIGN.md §4.2): one
+  launch digests every 128-lane ROW of a whole train state packed into a
+  single buffer.  Row granularity lets the DigestPlan pack leaves
+  back-to-back at 512 B alignment (tile alignment would inflate a state
+  with many small leaves by up to 256×), and per-leaf digests fall out of
+  a plain segment-sum over the row digests — no per-leaf launches, no
+  per-leaf host syncs.
 """
 
 from __future__ import annotations
@@ -23,9 +35,8 @@ TILE_ROWS = 256
 TILE = TILE_ROWS * LANES  # 32768 int32 = 128 KiB per VMEM tile
 
 
-def _checksum_kernel(x_ref, out_ref):
-    """x_ref: (1, TILE_ROWS, LANES) int32 tile; out_ref: (1, 2) int32."""
-    x = x_ref[0, :, :]
+def _tile_sums(x):
+    """(s1, s2_local) of one (TILE_ROWS, LANES) int32 tile."""
     rows, lanes = x.shape
     # local position weights 1..TILE (row-major within the tile)
     row = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 0)
@@ -33,8 +44,42 @@ def _checksum_kernel(x_ref, out_ref):
     idx = row * lanes + lane + 1
     s1 = jnp.sum(x, dtype=jnp.int32)
     s2 = jnp.sum(x * idx, dtype=jnp.int32)
+    return s1, s2
+
+
+def _checksum_kernel(x_ref, out_ref):
+    """x_ref: (1, TILE_ROWS, LANES) int32 tile; out_ref: (1, 2) int32."""
+    s1, s2 = _tile_sums(x_ref[0, :, :])
     out_ref[0, 0] = s1
     out_ref[0, 1] = s2
+
+
+def _row_checksum_kernel(x_ref, out_ref):
+    """x_ref (1, TILE_ROWS, LANES) -> out_ref (1, TILE_ROWS, 2): per-row
+    Fletcher partials with lane-local weights 1..LANES.  Rows combine into
+    leaf digests exactly: Σ(off+j)·x = off·Σx + Σj·x (mod 2^32)."""
+    x = x_ref[0, :, :]
+    rows, lanes = x.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1) + 1
+    out_ref[0, :, 0] = jnp.sum(x, axis=1, dtype=jnp.int32)
+    out_ref[0, :, 1] = jnp.sum(x * lane, axis=1, dtype=jnp.int32)
+
+
+def _row_checksum_batch_kernel(x_ref, out_ref):
+    """All-tiles-in-one-block variant of ``_row_checksum_kernel``:
+    x_ref (nt, TILE_ROWS, LANES), out_ref (nt, TILE_ROWS, 2).
+
+    Used in interpret mode, where per-grid-step execution costs O(full
+    buffer) per step (the interpreter re-slices the whole operand each
+    iteration), making a tiled grid quadratic in state size.  One block +
+    vectorized reductions keeps the interpret path a single linear pass.
+    Compiled TPU keeps the tiled grid (a whole train state does not fit
+    VMEM)."""
+    x = x_ref[...]
+    _, rows, lanes = x.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1) + 1
+    out_ref[..., 0] = jnp.sum(x, axis=2, dtype=jnp.int32)
+    out_ref[..., 1] = jnp.sum(x * lane[None, :, :], axis=2, dtype=jnp.int32)
 
 
 def checksum_tiles(x_i32_tiles: jnp.ndarray, *, interpret: bool = True):
@@ -47,5 +92,40 @@ def checksum_tiles(x_i32_tiles: jnp.ndarray, *, interpret: bool = True):
                                lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nt, 2), jnp.int32),
+        interpret=interpret,
+    )(x_i32_tiles)
+
+
+def row_checksums(x_i32_tiles: jnp.ndarray, *, interpret: bool = True):
+    """Single-launch whole-state digest pass at ROW granularity.
+
+    x_i32_tiles : (nt, TILE_ROWS, LANES) int32 — every row of every leaf,
+                  packed back to back at row (512 B) alignment
+                  (see digest.DigestPlan).
+    Returns (nt, TILE_ROWS, 2) int32 per-row partials; the caller combines
+    rows into per-leaf digests with its static row→leaf segment map:
+        leaf_s1 = Σ_r s1_r        leaf_s2 = Σ_r (s2_r + off_r·s1_r)
+    where off_r is the row's element offset within its leaf (mod 2^32 —
+    int32 wraparound makes the combine exact).
+
+    Compiled (TPU): one grid launch, one 128 KiB VMEM tile per step.
+    Interpret (CPU tests): the same digest as a single-block vectorized
+    kernel — the interpreter's per-grid-step cost is O(full buffer), which
+    would make the tiled grid quadratic in state size.
+    """
+    nt = x_i32_tiles.shape[0]
+    if interpret:
+        return pl.pallas_call(
+            _row_checksum_batch_kernel,
+            out_shape=jax.ShapeDtypeStruct((nt, TILE_ROWS, 2), jnp.int32),
+            interpret=True,
+        )(x_i32_tiles)
+    return pl.pallas_call(
+        _row_checksum_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((1, TILE_ROWS, LANES),
+                               lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, TILE_ROWS, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, TILE_ROWS, 2), jnp.int32),
         interpret=interpret,
     )(x_i32_tiles)

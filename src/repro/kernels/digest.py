@@ -1,0 +1,285 @@
+"""Fused single-launch state digesting — the DigestPlan engine.
+
+The paper's headline economics (~0% no-fault overhead) require detection to
+cost one HBM-bandwidth streaming pass.  The seed implementation dispatched
+one jit'd ``checksum`` per pytree leaf and forced a device→host sync per
+leaf per step — O(leaves) kernel launches and blocking transfers on the
+no-fault hot path.  This module replaces that with (DESIGN.md §4.2):
+
+* **DigestPlan** — computed once per state *structure* (treedef + leaf
+  shapes/dtypes) and cached: a flat int32 packing layout where every leaf
+  occupies a private, row-aligned (128-element / 512 B) range of a single
+  buffer — dense enough that a state with hundreds of small leaves packs
+  to ~its own size, not 128 KiB per leaf — plus the row→leaf segment map
+  and per-row offset table the combine needs.
+* **one Pallas launch** per digest: all selected leaves are packed into
+  one (nt, TILE_ROWS, LANES) buffer and digested by a single
+  ``row_checksums`` pallas_call; per-leaf digests are exact segment sums
+  of the per-row partials (int32 wraparound arithmetic, so the result is
+  bit-identical to per-leaf ``ops.checksum``).
+* **device-side comparison** — consumers keep an on-device reference
+  digest table (n_leaves, 2) and compare tables on device, fetching one
+  scalar "any mismatch?" flag per check.  Leaf attribution via the
+  leaf-index→path map happens only on the slow (fault) path.
+
+Instrumentation: ``STATS`` counts launches (one per digest invocation —
+each compiled digest function contains exactly one pallas_call), host
+syncs (every device→host fetch in this module and in the canary goes
+through ``fetch``), and traces (incremented inside traced bodies, so a
+plan-cache hit provably does not retrace).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ops import segment_sum
+
+from repro.kernels import checksum as _ck
+from repro.kernels import ref as _ref
+
+LANES = _ck.LANES
+TILE_ROWS = _ck.TILE_ROWS
+
+
+# ---------------------------------------------------------------------------
+# instrumentation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DigestStats:
+    """Hot-path accounting for the detection-cost model (DESIGN.md §4.2)."""
+    launches: int = 0   # fused digest invocations (== pallas launches)
+    syncs: int = 0      # device→host transfers
+    traces: int = 0     # jit traces of digest functions (cache misses)
+
+    def reset(self) -> None:
+        self.launches = self.syncs = self.traces = 0
+
+    def snapshot(self) -> Tuple[int, int, int]:
+        return (self.launches, self.syncs, self.traces)
+
+
+STATS = DigestStats()
+
+
+def fetch(x) -> np.ndarray:
+    """The ONLY device→host crossing in the digest subsystem — counted."""
+    STATS.syncs += 1
+    return np.asarray(x)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+def leaf_key(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    key: str
+    index: int          # position in the plan's canonical (sorted-key) order
+    size: int           # int32 elements (== element count; to_i32 is 1:1)
+    n_rows: int         # row-aligned footprint: max(1, ceil(size/LANES))
+
+
+class DigestPlan:
+    """Packing layout + compiled digest functions for one state structure.
+
+    The canonical leaf order is sorted-by-path (stable across runs and
+    matching the rotating-canary slice assignment).  Every compiled
+    function in a plan contains exactly one pallas_call.
+    """
+
+    def __init__(self, treedef, keys: Tuple[str, ...],
+                 sizes: Tuple[int, ...]):
+        self.treedef = treedef
+        self.keys = keys                       # sorted
+        self.specs = tuple(
+            LeafSpec(key=k, index=i, size=s,
+                     n_rows=max(1, -(-s // LANES)))
+            for i, (k, s) in enumerate(zip(keys, sizes)))
+        self.n_leaves = len(keys)
+        self.n_rows = sum(sp.n_rows for sp in self.specs)
+        self.n_tiles = -(-self.n_rows // TILE_ROWS)
+        self.bytes_per_pass = self.n_tiles * TILE_ROWS * LANES * 4
+        self._key_to_index = {k: i for i, k in enumerate(keys)}
+        self._digest_fns: Dict[Tuple[int, ...], object] = {}
+        # permutation from tree_flatten_with_path order -> sorted-key order
+        self._order: Optional[List[int]] = None
+
+    # -- leaf extraction ---------------------------------------------------
+
+    def leaves(self, tree) -> List:
+        """Tree leaves in the plan's canonical (sorted-key) order.
+
+        Rejects trees whose structure differs from the plan's — a renamed
+        or moved leaf must never be silently digested against another
+        leaf's reference row."""
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(
+                f"tree structure does not match DigestPlan: got {treedef}, "
+                f"plan was built for {self.treedef}")
+        if self._order is None:
+            with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+            paths = [leaf_key(p) for p, _ in with_path]
+            self._order = sorted(range(len(paths)), key=lambda i: paths[i])
+        return [flat[i] for i in self._order]
+
+    def index_of(self, key: str) -> int:
+        return self._key_to_index[key]
+
+    # -- compiled digest over a leaf subset --------------------------------
+
+    def digest_fn(self, indices: Optional[Sequence[int]] = None):
+        """jit'd ``leaves_subset -> (len(indices), 2) int32`` digest table.
+
+        ``indices`` selects plan leaves (canonical order); None = all.
+        Cached per subset, so the hot path never retraces.
+        """
+        idx = tuple(range(self.n_leaves)) if indices is None \
+            else tuple(indices)
+        fn = self._digest_fns.get(idx)
+        if fn is None:
+            fn = self._build_digest_fn(idx)
+            self._digest_fns[idx] = fn
+        return fn
+
+    def _build_digest_fn(self, idx: Tuple[int, ...]):
+        specs = [self.specs[i] for i in idx]
+        n_rows = sum(sp.n_rows for sp in specs)
+        padded_rows = -(-n_rows // TILE_ROWS) * TILE_ROWS
+        nt = padded_rows // TILE_ROWS
+        # row→leaf segment map; trailing pad rows are all-zero so they
+        # contribute nothing to whichever segment they land in (use 0)
+        seg_ids = np.zeros(padded_rows, np.int32)
+        offsets = np.zeros(padded_rows, np.int32)
+        r = 0
+        for j, sp in enumerate(specs):
+            seg_ids[r:r + sp.n_rows] = j
+            # each row's element offset within its leaf, for the exact
+            # Fletcher combine: Σ(off+j)·x = off·Σx + Σj·x (mod 2^32)
+            offsets[r:r + sp.n_rows] = \
+                np.arange(sp.n_rows, dtype=np.int32) * np.int32(LANES)
+            r += sp.n_rows
+        n_seg = len(specs)
+
+        def digest(leaves):
+            STATS.traces += 1          # trace-time only: counts cache misses
+            # row-aligned packing: raw flats + constant zero fillers in one
+            # concatenate (a jnp.pad per leaf costs a full extra copy each)
+            parts = []
+            for sp, leaf in zip(specs, leaves):
+                flat = _ref.to_i32(leaf)
+                parts.append(flat)
+                fill = sp.n_rows * LANES - flat.shape[0]
+                if fill:
+                    parts.append(jnp.zeros((fill,), jnp.int32))
+            tail = (padded_rows - n_rows) * LANES
+            if tail:
+                parts.append(jnp.zeros((tail,), jnp.int32))
+            buf = (jnp.concatenate(parts) if len(parts) > 1 else parts[0]) \
+                .reshape(nt, TILE_ROWS, LANES)
+            d = _ck.row_checksums(buf, interpret=_interpret()) \
+                .reshape(padded_rows, 2)
+            seg = jnp.asarray(seg_ids)
+            s1 = segment_sum(d[:, 0], seg, num_segments=n_seg)
+            s2 = segment_sum(d[:, 1] + jnp.asarray(offsets) * d[:, 0],
+                             seg, num_segments=n_seg)
+            return jnp.stack([s1, s2], axis=1)
+
+        return jax.jit(digest)
+
+    # -- public digesting --------------------------------------------------
+
+    def digest_table(self, tree) -> jnp.ndarray:
+        """(n_leaves, 2) int32 digest table, on device.  ONE launch, zero
+        host syncs — the fused replacement for per-leaf ``checksum``."""
+        leaves = self.leaves(tree)
+        STATS.launches += 1
+        return self.digest_fn()(leaves)
+
+    def digest_subset(self, tree, indices: Sequence[int]) -> jnp.ndarray:
+        """(len(indices), 2) digest table for the selected leaves — one
+        launch covering only those leaves' tiles (the rotating-canary read
+        slice)."""
+        indices = tuple(indices)
+        if not indices:
+            return jnp.zeros((0, 2), jnp.int32)
+        leaves = self.leaves(tree)
+        STATS.launches += 1
+        return self.digest_fn(indices)([leaves[i] for i in indices])
+
+    def digest_dict(self, tree) -> Dict[str, np.ndarray]:
+        """Host-side per-leaf digests: one launch + ONE transfer (the seed
+        paid one launch and one transfer per leaf)."""
+        table = fetch(self.digest_table(tree))
+        return {k: table[i] for i, k in enumerate(self.keys)}
+
+    def verify(self, tree, reference: Dict[str, np.ndarray]) -> List[str]:
+        """Leaf paths whose digest no longer matches ``reference`` — one
+        launch + one transfer; used by snapshot/rung verification."""
+        current = self.digest_dict(tree)
+        bad = []
+        for k, ref_digest in reference.items():
+            cur = current.get(k)
+            if cur is None or not np.array_equal(cur, ref_digest):
+                bad.append(k)
+        return sorted(bad)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[object, DigestPlan] = {}
+
+
+def _signature(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    sig = tuple(sorted(
+        (leaf_key(p), jnp.shape(x), jnp.result_type(x).name)
+        for p, x in flat))
+    return treedef, sig
+
+
+def plan_for(tree) -> DigestPlan:
+    """The cached DigestPlan for ``tree``'s structure.  Keyed by treedef +
+    per-leaf (path, shape, dtype), so every state with the same structure —
+    every step of a training run — shares one plan and its compiled
+    digest functions (no per-step retracing)."""
+    treedef, sig = _signature(tree)
+    key = (treedef, sig)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        keys = tuple(k for k, _, _ in sig)
+        # to_i32 maps every supported dtype to exactly one int32 per
+        # element, so the packed size is just the element count.
+        sizes = tuple(int(np.prod(shape, dtype=np.int64))
+                      for _, shape, _ in sig)
+        plan = DigestPlan(treedef, keys, sizes)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()

@@ -8,7 +8,6 @@ orchestration (leaf digests for whole train states).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, List, Sequence, Tuple
 
 import jax
@@ -16,9 +15,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import checksum as _ck
+from repro.kernels import digest as _dg
 from repro.kernels import parity as _pk
 from repro.kernels import ref as _ref
 from repro.kernels import vote as _vk
+from repro.kernels.digest import leaf_key, plan_for  # noqa: F401 (re-export)
 
 TILE = _ck.TILE  # int32 elements per kernel tile
 
@@ -36,15 +37,14 @@ def _tiles(x) -> Tuple[jnp.ndarray, int]:
     return flat.reshape(nt, _ck.TILE_ROWS, _ck.LANES), n
 
 
-@partial(jax.jit, static_argnames=("block",))
-def checksum(x, block: int = _ref.CHECKSUM_BLOCK) -> jnp.ndarray:
+@jax.jit
+def checksum(x) -> jnp.ndarray:
     """Two-term Fletcher digest int32[2] of the raw bits of ``x``.
 
     Tile digests (s1_t, s2_t) combine exactly:
         s1 = Σ_t s1_t
         s2 = Σ_t (s2_t + offset_t · s1_t)      (mod 2^32)
     """
-    del block
     tiles, _ = _tiles(x)
     d = _ck.checksum_tiles(tiles, interpret=_interpret())  # (nt, 2)
     nt = d.shape[0]
@@ -56,8 +56,11 @@ def checksum(x, block: int = _ref.CHECKSUM_BLOCK) -> jnp.ndarray:
 
 @jax.jit
 def blocked_checksum(x) -> jnp.ndarray:
-    """Per-tile digests int32[nt, 2] (fault localisation granularity =
-    TILE int32 lanes = 128 KiB)."""
+    """Per-tile digests int32[nt, 2].  Localisation granularity is the
+    kernel tile: TILE = TILE_ROWS·LANES = 32768 int32 elements = 128 KiB
+    (coarser than the pure-jnp oracle's ``ref.CHECKSUM_BLOCK`` default —
+    the oracle block size is a reference-semantics knob, not the kernel's
+    tiling)."""
     tiles, _ = _tiles(x)
     return _ck.checksum_tiles(tiles, interpret=_interpret())
 
@@ -136,61 +139,34 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# Pytree-level orchestration
+# Pytree-level orchestration — thin wrappers over the fused DigestPlan
+# (one pallas launch + one host transfer per call; the seed paid one
+# launch and one blocking transfer per LEAF — see DESIGN.md §4.2).
 # ---------------------------------------------------------------------------
-
-def leaf_key(path) -> str:
-    parts = []
-    for k in path:
-        if hasattr(k, "key"):
-            parts.append(str(k.key))
-        elif hasattr(k, "idx"):
-            parts.append(str(k.idx))
-        else:
-            parts.append(str(k))
-    return "/".join(parts)
-
 
 def tree_checksums(tree) -> Dict[str, np.ndarray]:
     """Digest per leaf, keyed by path string — the Recovery Table's 'key'
     column (the paper keys on (file, line, column) debug tuples; ours is the
     state-leaf path, which plays the same role)."""
-    out = {}
-
-    def visit(path, leaf):
-        out[leaf_key(path)] = np.asarray(checksum(leaf))
-        return leaf
-
-    jax.tree_util.tree_map_with_path(visit, tree)
-    return out
+    return plan_for(tree).digest_dict(tree)
 
 
 def subtree_checksums(tree, keys) -> Dict[str, np.ndarray]:
     """Digests for the named leaves only (the rotating-canary read slice —
     the paid 1/K of the detection cost; everything else is modeled as fused
-    into the step's write stream)."""
-    want = set(keys)
-    out = {}
-
-    def visit(path, leaf):
-        k = leaf_key(path)
-        if k in want:
-            out[k] = np.asarray(checksum(leaf))
-        return leaf
-
-    jax.tree_util.tree_map_with_path(visit, tree)
-    return out
+    into the step's write stream).  One launch over the subset's tiles."""
+    plan = plan_for(tree)
+    kset = set(keys)
+    want = [k for k in plan.keys if k in kset]
+    idx = [plan.index_of(k) for k in want]
+    table = _dg.fetch(plan.digest_subset(tree, idx)) if idx \
+        else np.zeros((0, 2), np.int32)
+    return {k: table[i] for i, k in enumerate(want)}
 
 
 def verify_tree(tree, reference: Dict[str, np.ndarray]) -> List[str]:
     """Return leaf paths whose digest no longer matches ``reference``."""
-    current = tree_checksums(tree)
-    bad = []
-    for k, ref_digest in reference.items():
-        cur = current.get(k)
-        if cur is None or not np.array_equal(cur, ref_digest):
-            bad.append(k)
-    return sorted(bad)
+    return plan_for(tree).verify(tree, reference)
 
 
 def rotating_slice(step: int, n_slices: int, n_leaves: int) -> List[int]:

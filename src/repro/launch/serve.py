@@ -112,12 +112,17 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
             rep.faults_injected += 1
             last_inject = t
 
-        report = canary.check(t, {"cache": cache}) if canary else None
-
         t0 = time.perf_counter()
         logits, new_cache = decode(params, cache, token)
         jax.block_until_ready(logits)
         rep.decode_ms.append(1e3 * (time.perf_counter() - t0))
+
+        # fused rotating canary — one launch + one scalar sync per token:
+        # verify slice t%K of the cache the decode just consumed, arm
+        # slice (t+1)%K of the fresh cache
+        report = canary.check_and_arm(t, {"cache": cache},
+                                      {"cache": new_cache}) \
+            if canary else None
 
         ok = report is None and bool(jnp.isfinite(logits).all())
         if ok:
@@ -125,8 +130,6 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             inputs.append(np.asarray(token))
             rep.tokens_out += n_requests
-            if canary:
-                canary.arm(t, {"cache": cache})   # digests slice (t+1)%K
             t += 1
             continue
 

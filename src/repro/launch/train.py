@@ -19,6 +19,7 @@ import argparse
 import json
 import random
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -39,6 +40,7 @@ from repro.core import (
     trap_loss_spike,
     trap_nonfinite,
 )
+from repro.core.detect import LOSS_WINDOW
 from repro.data.pipeline import TokenPipeline
 from repro.train.loop import make_train_state, make_train_step
 
@@ -107,7 +109,9 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
 
     rng = random.Random(seed + 7)
     rep = LoopReport()
-    history: List[float] = []
+    # bounded: the spike trap reads only the last LOSS_WINDOW losses
+    # (rep.losses keeps the full telemetry trace)
+    history = deque(maxlen=LOSS_WINDOW)
     last_inject = -1
 
     s = 0
@@ -135,17 +139,17 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             report = trap_nonfinite(s, metrics) or \
                 trap_loss_spike(s, metrics, history)
             if report is None and canary is not None:
-                # rotating canary: verify the slice armed at the end of the
-                # previous step (was the pre-step state rotted?)
-                report = canary.check(s, state)
+                # fused rotating canary — ONE launch + ONE scalar sync:
+                # verify the pre-step state's slice (armed at the end of an
+                # earlier step: was the state rotted while at rest / in
+                # use?) and digest the fresh output's next-check slice
+                report = canary.check_and_arm(s, state, new_state)
 
         if report is None:
             state = new_state
             loss = float(metrics["loss"])
             history.append(loss)
             rep.losses.append(loss)
-            if canary is not None:
-                canary.arm(s, state)    # digest next step's check slice
             if verbose and s % max(1, steps // 10) == 0:
                 print(f"[train] step {s:5d} loss {loss:.4f}")
             s += 1
@@ -171,6 +175,10 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
                 raise
             state, ck_step = ckpt.restore(state)
             s = ck_step
+            if canary is not None:
+                # restored state == new reference; stale digests would
+                # fire a spurious checksum fault on the next step
+                canary.refresh(state)
             if verbose:
                 print(f"[train] cold restore to step {ck_step}")
 

@@ -1,0 +1,205 @@
+"""Fused digest engine (kernels/digest.py + the reworked ChecksumCanary).
+
+The detection-cost contract (DESIGN.md §4.2):
+  * the fused whole-state digest is bit-identical to per-leaf ``checksum``;
+  * a flipped bit in ANY leaf is attributed to exactly that leaf path;
+  * the plan cache prevents retracing (trace counters stay flat);
+  * one canary ``check_and_arm`` = exactly 1 fused launch + 1 host sync.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.detect import ChecksumCanary
+from repro.core.faults import flip_bit
+from repro.core.microcheckpoint import MicroCheckpointer
+from repro.kernels import digest as dg
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tree():
+    """Mixed dtypes/shapes: multi-tile, sub-tile, 16-bit, int, scalar."""
+    ks = jax.random.split(KEY, 4)
+    return {
+        "params": {
+            "w": jax.random.normal(ks[0], (257, 129)),          # 1+ tiles
+            "b": jax.random.normal(ks[1], (33,)).astype(jnp.bfloat16),
+        },
+        "opt": {"m": jax.random.normal(ks[2], (40000,))},        # 2 tiles
+        "iv": {"step": jnp.int32(12), "pos": jnp.int32(7)},
+        "tok": jax.random.randint(ks[3], (17, 3), -5, 5, jnp.int32),
+    }
+
+
+def _leaves_by_key(tree):
+    out = {}
+
+    def visit(path, leaf):
+        out[ops.leaf_key(path)] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness
+# ---------------------------------------------------------------------------
+
+def test_fused_digest_matches_per_leaf_checksum():
+    tree = _tree()
+    plan = dg.plan_for(tree)
+    table = np.asarray(plan.digest_table(tree))
+    leaves = _leaves_by_key(tree)
+    assert set(plan.keys) == set(leaves)
+    for i, k in enumerate(plan.keys):
+        per_leaf = np.asarray(ops.checksum(leaves[k]))
+        oracle = np.asarray(ref.checksum_ref(leaves[k]))
+        assert np.array_equal(table[i], per_leaf), k
+        assert np.array_equal(table[i], oracle), k
+
+
+def test_tree_checksums_is_fused_and_bit_exact():
+    tree = _tree()
+    digests = ops.tree_checksums(tree)
+    for k, leaf in _leaves_by_key(tree).items():
+        assert np.array_equal(digests[k], np.asarray(ops.checksum(leaf))), k
+
+
+def test_subtree_checksums_subset():
+    tree = _tree()
+    full = ops.tree_checksums(tree)
+    sub = ops.subtree_checksums(tree, ["opt/m", "iv/step"])
+    assert set(sub) == {"opt/m", "iv/step"}
+    for k, v in sub.items():
+        assert np.array_equal(v, full[k])
+
+
+# ---------------------------------------------------------------------------
+# attribution
+# ---------------------------------------------------------------------------
+
+def test_flip_in_any_leaf_attributed_to_exactly_that_leaf():
+    tree = _tree()
+    reference = ops.tree_checksums(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for j, (path, leaf) in enumerate(flat):
+        key = ops.leaf_key(path)
+        bit = 3 if np.asarray(leaf).dtype.itemsize * 8 > 3 else 0
+        corrupted = jax.tree_util.tree_unflatten(
+            treedef,
+            [flip_bit(x, 0, bit) if i == j else x
+             for i, (_, x) in enumerate(flat)])
+        assert ops.verify_tree(corrupted, reference) == [key]
+
+
+def test_canary_names_dormant_flip_in_armed_window():
+    """Corruption landing in a slice between its arm and its check — the
+    window the rotating canary guards — is caught at that slice's next
+    check and attributed to exactly the corrupted leaf."""
+    tree = _tree()
+    K = 3
+    canary = ChecksumCanary(tree, n_slices=K)
+    target_slice = list(canary._keys).index("opt/m") % K
+    bad = dict(tree, opt={"m": flip_bit(tree["opt"]["m"], 11, 4)})
+    reports = []
+    for s in range(K, 2 * K):
+        # the flip manifests while slice `target_slice` is armed: present
+        # the corrupted state at that slice's check step
+        seen = bad if s % K == target_slice else tree
+        reports.append(canary.check_and_arm(s, seen))
+    hits = [r for r in reports if r is not None]
+    assert len(hits) == 1
+    assert hits[0].leaves == ["opt/m"]
+
+
+# ---------------------------------------------------------------------------
+# hot-path accounting: launches / syncs / retraces
+# ---------------------------------------------------------------------------
+
+def test_check_and_arm_is_one_launch_one_sync_no_retrace():
+    tree = _tree()
+    assert len(jax.tree_util.tree_leaves(tree)) > 4   # multi-leaf state
+    canary = ChecksumCanary(tree, n_slices=4)
+    for s in range(8):                                # warm every rotation
+        canary.check_and_arm(s, tree)
+    dg.STATS.reset()
+    for s in range(8, 16):
+        assert canary.check_and_arm(s, tree) is None
+    launches, syncs, traces = dg.STATS.snapshot()
+    assert launches == 8     # exactly ONE fused launch per step
+    assert syncs == 8        # exactly ONE device→host transfer per step
+    assert traces == 0       # plan/jit caches prevent any retracing
+
+
+def test_tree_checksums_one_launch_one_sync():
+    tree = _tree()
+    ops.tree_checksums(tree)                          # warm/compile
+    dg.STATS.reset()
+    ops.tree_checksums(tree)
+    launches, syncs, traces = dg.STATS.snapshot()
+    assert (launches, syncs, traces) == (1, 1, 0)
+
+
+def test_plan_cache_reuses_plan_and_compiled_fns():
+    tree = _tree()
+    plan = dg.plan_for(tree)
+    same_structure = jax.tree_util.tree_map(lambda x: x + 0, tree)
+    assert dg.plan_for(same_structure) is plan
+    plan.digest_table(tree)                           # warm
+    dg.STATS.reset()
+    plan.digest_table(same_structure)                 # same structure ->
+    assert dg.STATS.traces == 0                       # no retrace
+    # a different structure gets its own plan
+    other = {"x": jnp.ones((5,))}
+    assert dg.plan_for(other) is not plan
+
+
+def test_canary_instances_share_compiled_step_fns():
+    """One canary per campaign trial must not recompile the fused step."""
+    tree = _tree()
+    c1 = ChecksumCanary(tree, n_slices=2)
+    for s in range(4):
+        c1.check_and_arm(s, tree)
+    dg.STATS.reset()
+    c2 = ChecksumCanary(tree, n_slices=2)             # fresh instance
+    for s in range(4):
+        c2.check_and_arm(s, tree)
+    assert dg.STATS.traces == 0
+
+
+# ---------------------------------------------------------------------------
+# consumers
+# ---------------------------------------------------------------------------
+
+def test_micro_snapshot_single_pass_digests_and_cached_memory():
+    tree = _tree()
+    micro = MicroCheckpointer(interval=1, keep=2)
+    micro.snapshot(0, tree)
+    snap = micro.snapshots[-1]
+    # digests certify the stored bytes and match the live state's digests
+    assert micro.verify(snap) == []
+    live = ops.tree_checksums(tree)
+    assert all(np.array_equal(snap.digests[k], live[k]) for k in live)
+    # memory accounting cached at snapshot time, no re-materialisation
+    want = sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree))
+    assert snap.nbytes == want
+    micro.snapshot(1, tree)
+    assert micro.memory_bytes == 2 * want
+
+
+def test_refresh_subset_updates_reference_rows():
+    tree = _tree()
+    canary = ChecksumCanary(tree, n_slices=1)
+    bad = dict(tree, opt={"m": flip_bit(tree["opt"]["m"], 2, 8)})
+    assert canary.check(0, bad) is not None
+    canary.refresh(bad, keys=["opt/m"])
+    assert canary.check(0, bad) is None
+    # and the rest of the table still guards the untouched leaves
+    worse = dict(bad, tok=flip_bit(bad["tok"], 1, 0))
+    report = canary.check(0, worse)
+    assert report is not None and report.leaves == ["tok"]

@@ -1,9 +1,10 @@
 """Hypothesis property tests for the paper's Eq. (1) and the IV registry —
 the system invariants behind induction-variable recovery."""
 
-from hypothesis import given, settings, strategies as st
-
 import pytest
+
+pytest.importorskip("hypothesis")   # optional dep: skip, don't break collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.induction import IVRegistry, IVSpec, RecoveryAbort
 

@@ -4,7 +4,10 @@ detection, data-pipeline determinism and work-stealing invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep: skip, don't break collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.faults import flip_bit
 from repro.data.pipeline import TokenPipeline, shard_assignment
