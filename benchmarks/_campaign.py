@@ -50,6 +50,7 @@ from repro.configs import get_config
 from repro.core import (
     ChecksumCanary,
     FaultReport,
+    InjectionPlan,
     MicroCheckpointer,
     RecoveryFailed,
     RecoveryRuntime,
@@ -93,6 +94,7 @@ class Campaign:
         self.pipe = TokenPipeline(self.cfg.model.vocab_size, S, B, seed=seed)
         self.bfn = lambda s: self.pipe.batch_at(s)
         self.step = jax.jit(make_train_step(self.cfg, global_batch=B))
+        self._donated_step = None    # built lazily: donate_argnums=(0,)
 
         # fault-free reference trajectory (ground truth for benign/SDC/exact)
         state = make_train_state(self.cfg, jax.random.PRNGKey(seed),
@@ -110,16 +112,52 @@ class Campaign:
         return [np.asarray(x).tobytes()
                 for x in jax.tree_util.tree_leaves(state)]
 
+    @staticmethod
+    def clone(tree):
+        """Deep device copy — a donated loop must not delete buffers the
+        injected tree shares with the ground-truth trajectory."""
+        return jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                      tree)
+
+    def donated_step(self):
+        """The production-compilation step: ``donate_argnums=(0,)`` (XLA
+        updates the state in place; the pre-step buffers die)."""
+        if self._donated_step is None:
+            self._donated_step = jax.jit(
+                make_train_step(self.cfg, global_batch=self.B),
+                donate_argnums=(0,))
+        return self._donated_step
+
     # ------------------------------------------------------------------
 
     def run_trial(self, rng: random.Random, mode: str = "iterpro",
                   target: Optional[str] = None,
                   use_canary: bool = False,
-                  canary_slices: int = 4) -> Trial:
-        tgt = target or rng.choices(["params", "opt", "iv"],
-                                    weights=[0.55, 0.40, 0.05])[0]
-        t0 = rng.randrange(1, self.total_steps - 1)
-        plan = sample_plan(rng, self.states[t0], max_step=1, target=tgt)
+                  canary_slices: int = 4,
+                  plan: Optional[InjectionPlan] = None,
+                  donate: bool = False) -> Trial:
+        """One injection trial.
+
+        ``plan``   : fixed InjectionPlan (its ``step`` is the injection
+                     step) — the seeded-conformance entry point; None
+                     samples the paper's size-weighted model.
+        ``donate`` : run the faulty loop with the donated step — the
+                     canary switches to the arm-before/check-after pair
+                     around the adversary window, and recovery pivots to
+                     snapshot + replay (RecoveryRuntime(donated=True)).
+        """
+        if mode == "care" and donate:
+            raise ValueError("care mode diagnoses the live IV block and is "
+                             "not defined for a donated loop")
+        if plan is None:
+            tgt = target or rng.choices(["params", "opt", "iv"],
+                                        weights=[0.55, 0.40, 0.05])[0]
+            t0 = rng.randrange(1, self.total_steps - 1)
+            plan = sample_plan(rng, self.states[t0], max_step=1, target=tgt)
+            plan = dataclasses.replace(plan, step=t0)
+        tgt = plan.target
+        t0 = plan.step
+        assert 1 <= t0 < self.total_steps
         trial = Trial(target=tgt, leaf=f"{tgt}/{plan.leaf}", bit=plan.bit,
                       inject_step=t0)
 
@@ -130,7 +168,10 @@ class Campaign:
             micro.maybe_snapshot(s, self.states[s])
             micro.record_iv(s, self.states[s]["iv"])
 
+        step_fn = self.donated_step() if donate else self.step
         state = inject(self.states[t0], plan)
+        if donate:
+            state = self.clone(state)
         canary = ChecksumCanary(self.states[t0], n_slices=canary_slices) \
             if use_canary else None
         # bounded: the spike trap reads only the last LOSS_WINDOW losses
@@ -142,10 +183,22 @@ class Campaign:
             if s > t0:
                 micro.maybe_snapshot(s, state)
                 micro.record_iv(s, state["iv"])
-            new_state, metrics = self.step(state, self.bfn(s))
+            if donate and canary is not None:
+                # donated protocol: slice s%K was armed when this buffer
+                # was the previous step's fresh output (for s == t0: at
+                # canary construction); verify it at its last readable
+                # moment, one launch + one scalar sync
+                report = canary.check(s, state)
+                if report is not None:
+                    break
+            new_state, metrics = step_fn(state, self.bfn(s))
+            if donate and canary is not None:
+                # arm half: digest slice (s+1)%K of the fresh output (one
+                # launch, no sync) — next iteration's check verifies it
+                canary.arm_current(s + 1, new_state)
             report = trap_nonfinite(s, metrics) or \
                 trap_loss_spike(s, metrics, history)
-            if report is None and canary is not None:
+            if report is None and not donate and canary is not None:
                 # fused rotating canary: ONE launch + ONE scalar sync —
                 # verify slice s%K of the (pre-step) state the step just
                 # consumed, arm slice (s+1)%K of its output
@@ -182,7 +235,8 @@ class Campaign:
         runtime = RecoveryRuntime(step_fn=self.step, batch_fn=self.bfn,
                                   iv_registry=promote(self.cfg, self.B),
                                   micro=micro,
-                                  checkpoint=lambda: (self.states[0], 0))
+                                  checkpoint=lambda: (self.states[0], 0),
+                                  donated=donate)
         ladder = None
         if mode == "care":
             # CARE cannot repair loop state: if any IV is corrupted the RSI
@@ -215,11 +269,12 @@ class Campaign:
 
     def run(self, n_trials: int, mode: str = "iterpro",
             target: Optional[str] = None, seed: int = 1,
-            use_canary: bool = False, canary_slices: int = 4) -> List[Trial]:
+            use_canary: bool = False, canary_slices: int = 4,
+            donate: bool = False) -> List[Trial]:
         rng = random.Random(seed)
         return [self.run_trial(rng, mode=mode, target=target,
                                use_canary=use_canary,
-                               canary_slices=canary_slices)
+                               canary_slices=canary_slices, donate=donate)
                 for _ in range(n_trials)]
 
 

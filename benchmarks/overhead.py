@@ -28,31 +28,53 @@ from repro.kernels import ops as kops
 
 
 def _loop(campaign: Campaign, steps: int, *, traps: bool, canary_k: int,
-          snapshots: bool) -> float:
+          snapshots: bool, donate: bool = False) -> float:
     """Returns steps/sec over `steps` warm steps."""
     state = campaign.states[0]
+    if donate:
+        # a donated loop consumes its input buffers — run on a private
+        # deep copy so the campaign's ground-truth states survive
+        state = campaign.clone(state)
+        step_fn = campaign.donated_step()
+    else:
+        step_fn = campaign.step
     canary = ChecksumCanary(state, n_slices=canary_k) if canary_k else None
     micro = MicroCheckpointer(interval=2) if snapshots else None
     history = deque(maxlen=LOSS_WINDOW)   # bounded: the trap only ever
     # reads the last LOSS_WINDOW values
     # warm the step and one full canary rotation (compiles the K fused
     # step functions once; steady-state per-step cost is what we measure)
-    st, m = campaign.step(state, campaign.bfn(0))
+    if donate:
+        state, m = step_fn(state, campaign.bfn(0))
+    else:
+        st, m = step_fn(state, campaign.bfn(0))
     jax.block_until_ready(m["loss"])
     if canary is not None:
         for s in range(canary.n_slices):
-            canary.check_and_arm(s, state)
+            if donate:
+                canary.arm_current(s, state)
+                canary.check(s, state)
+            else:
+                canary.check_and_arm(s, state)
     t0 = time.perf_counter()
     for s in range(steps):
+        if canary is not None and donate:
+            # donated pair, arm half: digest slice s%K of the buffer the
+            # previous step produced (one launch, no sync)
+            canary.arm_current(s, state)
         if micro is not None:
             micro.maybe_snapshot(s, state)
             micro.record_iv(s, state["iv"])
-        new_state, metrics = campaign.step(state, campaign.bfn(s))
+        if canary is not None and donate:
+            # check half: verify the same slice of the same version at the
+            # buffer's last readable moment (one launch + one scalar sync)
+            canary.check(s, state)
+        new_state, metrics = step_fn(state, campaign.bfn(s))
         if traps:
             trap_nonfinite(s, metrics) or \
                 trap_loss_spike(s, metrics, history)
             history.append(float(metrics["loss"]))
-        if canary is not None:
+        if canary is not None and not donate:
             # one fused launch + one scalar sync: check slice s%K of the
             # pre-step state, arm slice (s+1)%K of the fresh output
             canary.check_and_arm(s, state, new_state)
@@ -125,12 +147,109 @@ def digest_throughput(campaign: Campaign, reps: int = 10) -> Dict:
     }
 
 
+def donation_steady_state(campaign: Campaign, steps: int = 16) -> Dict:
+    """Donation-mode hot-path accounting (the PR-3 tentpole contract):
+
+    * the digest path makes ZERO new device allocations per steady-state
+      step — the persistent packing buffer is donated through every
+      launch (``input_output_aliases`` on the pack kernel) and the
+      write-generation reference table is scatter-armed in place;
+    * the packing buffers are POINTER-STABLE: the same HBM ranges are
+      rewritten every step;
+    * per donated step the canary pair costs 2 launches (arm: no sync,
+      check: ONE scalar sync), 0 retraces — same 2/K bytes as the fused
+      non-donated call.
+    """
+    import gc
+
+    state = campaign.clone(campaign.states[0])
+    step_fn = campaign.donated_step()
+    canary = ChecksumCanary(state, n_slices=8)
+    state, m = step_fn(state, campaign.bfn(0))
+    jax.block_until_ready(m["loss"])
+    # warm every rotation's arm/check pair (compiles once per rotation)
+    for s in range(canary.n_slices):
+        canary.arm_current(s, state)
+        canary.check(s, state)
+    # record the packing-buffer addresses, then settle one full rotation:
+    # probing unsafe_buffer_pointer leaves per-buffer residue that the
+    # next donation of each subset flushes, and the live-array window
+    # below must contain only steady-state work
+    subsets = list(canary.plan._pack_bufs.keys())
+    union_ptrs = {idx: canary.plan.buffer_pointer(idx) for idx in subsets}
+    for s in range(canary.n_slices):
+        canary.arm_current(s, state)
+        canary.check(s, state)
+        new_state, metrics = step_fn(state, campaign.bfn(s))
+        state = new_state
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+
+    gc.collect()
+    live0 = len(jax.live_arrays())
+    kdigest.STATS.reset()
+    for s in range(steps):
+        canary.arm_current(s, state)
+        canary.check(s, state)
+        new_state, metrics = step_fn(state, campaign.bfn(s))
+        state = new_state
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    gc.collect()
+    live1 = len(jax.live_arrays())
+    launches, syncs, traces = kdigest.STATS.snapshot()
+    ptr_stable = all(canary.plan.buffer_pointer(idx) == p
+                     for idx, p in union_ptrs.items())
+
+    # donation-effectiveness probe: a digest must CONSUME the buffer it
+    # was handed (the donated object dies) and hand back the same HBM
+    # range.  A silently vetoed donation (e.g. a stray host view pinning
+    # the buffer) would leave the old object alive and/or move the
+    # address — the live-array delta alone cannot see that, since a
+    # fresh-alloc-and-free per step also nets zero.  Probe rotation 0's
+    # registered (hot-path-persistent) slice buffer with one more pair.
+    plan = canary.plan
+    idx_probe = tuple(canary._slice_indices(0))
+    probe_buf = plan._pack_bufs[idx_probe]
+    probe_ptr = plan.buffer_pointer(idx_probe)
+    canary.arm_current(0, state)
+    canary.check(0, state)
+    donation_effective = bool(probe_buf.is_deleted()
+                              and plan.buffer_pointer(idx_probe) == probe_ptr)
+
+    # digest-only throughput of the donated pair (no step compute in the
+    # timed window): bytes = 2 rotating slices of the packed state per step
+    t0 = time.perf_counter()
+    for s in range(steps):
+        canary.arm_current(s + 1, state)
+        canary.check(s + 1, state)
+    digest_wall = time.perf_counter() - t0
+    digested_bytes = 2 * canary.plan.bytes_per_pass / canary.n_slices
+    return {
+        "steps": steps,
+        # net live-array growth (leak detector); 0 allocs/step is proven
+        # by donation_effective + pack_buffer_ptr_stable, not this alone
+        "net_new_live_arrays_per_step": (live1 - live0) / steps,
+        "pack_buffer_ptr_stable": ptr_stable,
+        "donation_effective": donation_effective,
+        "canary_launches_per_step": launches / steps,
+        "canary_syncs_per_step": syncs / steps,
+        "canary_retraces_per_step": traces / steps,
+        "digested_mb_per_step": digested_bytes / 1e6,
+        "digest_gbps": digested_bytes * steps / digest_wall / 1e9,
+    }
+
+
 def run(campaign: Campaign, steps: int = 30) -> Dict:
     base = _loop(campaign, steps, traps=False, canary_k=0, snapshots=False)
     traps = _loop(campaign, steps, traps=True, canary_k=0, snapshots=False)
     snaps = _loop(campaign, steps, traps=True, canary_k=0, snapshots=True)
     k8 = _loop(campaign, steps, traps=True, canary_k=8, snapshots=True)
     k1 = _loop(campaign, steps, traps=True, canary_k=1, snapshots=True)
+    # donation mode: the production compilation setting (in-place state
+    # update) with the arm/check canary pair
+    dbase = _loop(campaign, steps, traps=True, canary_k=0, snapshots=True,
+                  donate=True)
+    dk8 = _loop(campaign, steps, traps=True, canary_k=8, snapshots=True,
+                donate=True)
 
     micro = MicroCheckpointer(interval=2)
     micro.snapshot(0, campaign.states[0])
@@ -139,15 +258,19 @@ def run(campaign: Campaign, steps: int = 30) -> Dict:
         "steps_per_s": {"no_detectors": base, "traps_only": traps,
                         "traps+snapshots": snaps,
                         "traps+snapshots+canary_k8": k8,
-                        "traps+snapshots+canary_k1": k1},
+                        "traps+snapshots+canary_k1": k1,
+                        "donated+traps+snapshots": dbase,
+                        "donated+traps+snapshots+canary_k8": dk8},
         "overhead_pct": {
             "traps_only": 100 * (base / traps - 1),
             "traps+snapshots": 100 * (base / snaps - 1),
             "traps+snapshots+canary_k8": 100 * (base / k8 - 1),
             "traps+snapshots+canary_k1": 100 * (base / k1 - 1),
+            "donated_canary_k8_vs_donated": 100 * (dbase / dk8 - 1),
         },
         "snapshot_memory_bytes": micro.memory_bytes,
         "digest": digest_throughput(campaign),
+        "donation": donation_steady_state(campaign),
         "note": ("canary digests run as Pallas interpret on CPU here — on "
                  "TPU the compiled kernel streams at HBM bandwidth and the "
                  "K=8 rotating canary (one fused launch + one scalar sync "
@@ -187,6 +310,34 @@ def render(out: Dict) -> str:
                  f"{d['canary_launches_per_step']} launch, "
                  f"{d['canary_syncs_per_step']} host sync, "
                  f"{d['canary_retraces_per_step']} retraces per step")
+    dn = out["donation"]
+    lines.append("")
+    lines.append("### Donation mode (donate_argnums=(0,): in-place state "
+                 "update)")
+    lines.append("")
+    zero_allocs = (dn["donation_effective"]
+                   and dn["pack_buffer_ptr_stable"]
+                   and dn["net_new_live_arrays_per_step"] <= 0)
+    lines.append(f"- steady-state device allocations/step on the digest "
+                 f"path: **{0 if zero_allocs else 'NONZERO'}** "
+                 f"(donation consumed the handed-in buffer: "
+                 f"{dn['donation_effective']}; packing buffers "
+                 f"pointer-stable: {dn['pack_buffer_ptr_stable']}; net "
+                 f"live-array growth/step: "
+                 f"{dn['net_new_live_arrays_per_step']:g})")
+    lines.append(f"- canary pair per step: "
+                 f"{dn['canary_launches_per_step']:g} launches "
+                 f"(arm: 0 syncs; check: 1 scalar sync → "
+                 f"{dn['canary_syncs_per_step']:g} syncs/step), "
+                 f"{dn['canary_retraces_per_step']:g} retraces; "
+                 f"{dn['digested_mb_per_step']:.1f} MB digested/step "
+                 f"at {dn['digest_gbps']:.2f} GB/s")
+    k_d = "donated+traps+snapshots"
+    k_dk8 = "donated+traps+snapshots+canary_k8"
+    d_cost = out["overhead_pct"]["donated_canary_k8_vs_donated"]
+    lines.append(f"- donated loop: {sps[k_d]:.2f} steps/s bare vs "
+                 f"{sps[k_dk8]:.2f} with canary K=8 "
+                 f"({d_cost:+.1f}% canary cost under donation)")
     lines.append(f"- double-buffered in-HBM snapshot memory: "
                  f"{out['snapshot_memory_bytes']/1e6:.1f} MB "
                  f"(paper: 27 MB fixed)")

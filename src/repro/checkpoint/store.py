@@ -176,8 +176,13 @@ class CheckpointManager:
         return True
 
     def save(self, step: int, state) -> None:
+        from repro.core.microcheckpoint import host_copy
+
         t0 = time.perf_counter()
-        host = jax.tree_util.tree_map(np.asarray, state)   # D2H only
+        # donation-safe D2H: a zero-copy host view would pin the live
+        # buffers against donate_argnums for as long as the async writer
+        # holds them — host_copy materialises real copies
+        host = host_copy(state)
         self.wait()                                        # 1-deep pipeline
         if self.async_write:
             self._thread = threading.Thread(

@@ -85,12 +85,37 @@ _FUSED_CACHE: Dict[Tuple[object, int, str, int], object] = {}
 class ChecksumCanary:
     """Rotating-slice checksum detector over a state subtree.
 
-    The reference digests live in an **on-device table** (n_leaves, 2);
-    ``check_and_arm`` verifies the step's check slice and refreshes the
-    next step's arm slice with a single fused Pallas launch, compares
-    digest tables device-side, and fetches exactly one scalar
-    "any mismatch?" flag.  Leaf attribution (the Recovery Table key the
-    runtime needs) walks the leaf-index map only on the fault path.
+    The reference digests live in a **double-buffered pair of on-device
+    tables** (n_leaves, 2), alternating by *generation*: every
+    ``check_and_arm`` verifies against the previous generation's table
+    (rows armed one step ago) while scatter-arming the next generation's
+    table **in place** — the write table is donated into the fused step
+    function, so the hot path allocates nothing, and the read table
+    survives untouched.  That survival is what makes the canary
+    donation-safe: when the training step runs with ``donate_argnums`` the
+    pre-step state buffer is consumed by the step, but its digests (armed
+    last generation) are still on device for the trap path to report
+    against.
+
+    One ``check_and_arm`` is a single fused launch (in-place pack +
+    digest) + exactly one scalar "any mismatch?" host sync.  Leaf
+    attribution (the Recovery Table key the runtime needs) walks the
+    leaf-index map only on the fault path.
+
+    Donation protocol: a fused check+arm launch cannot span a donated
+    step — the pre-step and post-step buffers are never simultaneously
+    readable, and comparing digests across state *versions* would trap on
+    every legitimate update.  A donated loop therefore splits the pair
+    over the buffer's lifetime: ``arm_current(s, state)`` at the TOP of
+    the loop body (digest slice ``s % K`` of the buffer the previous step
+    just produced; one launch, no sync) and ``check(s, state)`` right
+    before the step consumes it (one launch, ONE scalar sync).  Same
+    2·(1/K) bytes per step as the fused call; the protected at-rest
+    window is everything between the two dispatch points — on real
+    hardware, the async-queue gap where the buffer sits in HBM.
+    Fusing the pair back into one launch *inside* the donated step (check
+    the input slice + arm the output slice within the jitted step) is the
+    named follow-on (DESIGN.md).
 
     ``check``/``arm`` remain as standalone entry points for callers that
     hold only one state version at a time; each is itself a single fused
@@ -101,9 +126,24 @@ class ChecksumCanary:
         self.n_slices = max(1, n_slices)
         self.plan = kdigest.plan_for(tree)
         self._keys: Tuple[str, ...] = self.plan.keys
-        #: on-device reference digest table, row i == digest of leaf
-        #: ``self._keys[i]``.
-        self.reference: jnp.ndarray = self.plan.digest_table(tree)
+        table = self.plan.digest_table(tree)
+        #: generation-alternating reference tables; row i of either ==
+        #: digest of leaf ``self._keys[i]`` as of the generation that
+        #: last armed it.  ``_tables[_gen & 1]`` is the read (surviving)
+        #: generation, the other slot is scatter-armed in place.
+        self._tables = [table, table.copy()]
+        self._gen = 0
+
+    @property
+    def generation(self) -> int:
+        """Monotonic table generation — bumped by every arm and by a full
+        ``refresh`` (the post-restore correctness hinge; see ``refresh``)."""
+        return self._gen
+
+    @property
+    def reference(self) -> jnp.ndarray:
+        """The surviving (read-generation) on-device reference table."""
+        return self._tables[self._gen & 1]
 
     # -- slice geometry ----------------------------------------------------
 
@@ -116,12 +156,16 @@ class ChecksumCanary:
     # -- fused step functions ---------------------------------------------
 
     def _fused_fn(self, kind: str, r: int):
-        """jit'd (leaves, reference) -> (flag, bad_mask, new_reference).
+        """jit'd fused step function for rotation ``r``.
 
-        kind 'check_arm': leaves = check-slice leaves + arm-slice leaves
-        (possibly from two state versions) packed into ONE digest launch;
-        'check': check slice only (reference unchanged); 'arm': arm slice
-        only (no comparison).
+        kind 'check_arm': ``(pack_buf, leaves, ref_read, ref_write) ->
+        (pack_buf, flag, bad_mask, new_write)`` — check-slice leaves +
+        arm-slice leaves (possibly from two state versions) packed into
+        ONE digest launch; the packing buffer and the write-generation
+        table are donated, so the arm scatter is in place.
+        'check': ``(pack_buf, leaves, ref_read) -> (pack_buf, flag, bad)``
+        (no table written); 'arm': ``(pack_buf, leaves, ref_write) ->
+        (pack_buf, new_write)`` (no comparison).
         """
         key = (self.plan, self.n_slices, kind, r)
         fn = _FUSED_CACHE.get(key)
@@ -135,17 +179,29 @@ class ChecksumCanary:
         arm_rows = np.asarray(arm, np.int32)
         nc = len(chk)
 
-        def step_fn(leaves, reference):
-            table = digest(leaves)              # ONE pallas launch
-            bad = jnp.any(table[:nc] != reference[chk_rows], axis=1) \
-                if nc else jnp.zeros((0,), bool)
-            new_ref = reference.at[arm_rows].set(table[nc:]) \
-                if len(arm) else reference
-            return jnp.any(bad), bad, new_ref
-
-        fn = jax.jit(step_fn)
-        _FUSED_CACHE[key] = fn
-        return fn
+        if kind == "check":
+            def check_fn(buf, leaves, ref_read):
+                buf, table = digest(buf, leaves)    # ONE fused launch
+                bad = jnp.any(table[:nc] != ref_read[chk_rows], axis=1) \
+                    if nc else jnp.zeros((0,), bool)
+                return buf, jnp.any(bad), bad
+            fn = jax.jit(check_fn, donate_argnums=(0,))
+        elif kind == "arm":
+            def arm_fn(buf, leaves, ref_write):
+                buf, table = digest(buf, leaves)    # ONE fused launch
+                return buf, ref_write.at[arm_rows].set(table)
+            fn = jax.jit(arm_fn, donate_argnums=(0, 2))
+        else:
+            def step_fn(buf, leaves, ref_read, ref_write):
+                buf, table = digest(buf, leaves)    # ONE fused launch
+                bad = jnp.any(table[:nc] != ref_read[chk_rows], axis=1) \
+                    if nc else jnp.zeros((0,), bool)
+                new_write = ref_write.at[arm_rows].set(table[nc:]) \
+                    if len(arm) else ref_write
+                return buf, jnp.any(bad), bad, new_write
+            fn = jax.jit(step_fn, donate_argnums=(0, 3))
+        _FUSED_CACHE[key] = (fn, union)
+        return fn, union
 
     def _gather(self, tree, indices: Sequence[int]) -> List:
         leaves = self.plan.leaves(tree)
@@ -162,14 +218,20 @@ class ChecksumCanary:
     def check_and_arm(self, step: int, tree, armed_tree=None
                       ) -> Optional[FaultReport]:
         """The fused per-step canary: verify slice ``step % K`` of ``tree``
-        against the reference armed last step, and (re)digest slice
-        ``(step+1) % K`` of ``armed_tree`` (default: ``tree``) — one kernel
-        launch, one scalar host sync.
+        against the generation armed last step, and (re)digest slice
+        ``(step+1) % K`` of ``armed_tree`` (default: ``tree``) into the
+        next generation — one kernel launch, one scalar host sync, zero
+        allocations (packing buffer and write table both donated).
 
-        In a training loop call this after the step with
+        In a (non-donated) training loop call this after the step with
         ``(pre_step_state, post_step_state)``: the check slice of the
         pre-step state is the same buffer the previous step armed, and the
         arm slice snapshots the fresh output the next check will verify.
+        Donated loops must NOT use this fused form across the step — use
+        the ``arm_current``/``check`` pair (see class docstring): a
+        donated step consumes the pre-step buffer, so a post-hoc check
+        would have nothing to digest, and a pre-step fused call would
+        compare digests across state versions.
         """
         if armed_tree is None:
             armed_tree = tree
@@ -179,10 +241,15 @@ class ChecksumCanary:
             self._gather(armed_tree, self._slice_indices(step + 1))
         if not leaves:
             return None
-        fn = self._fused_fn("check_arm", r)
+        fn, union = self._fused_fn("check_arm", r)
         kdigest.STATS.launches += 1
-        flag, bad, new_ref = fn(leaves, self.reference)
-        self.reference = new_ref
+        wslot = (self._gen + 1) & 1
+        buf, flag, bad, new_write = fn(
+            self.plan.take_buffer(union), leaves,
+            self._tables[self._gen & 1], self._tables[wslot])
+        self.plan.put_buffer(union, buf)
+        self._tables[wslot] = new_write
+        self._gen += 1
         if bool(kdigest.fetch(flag)):       # the step's ONE host sync
             return self._report(step, chk, bad)
         return None
@@ -190,19 +257,24 @@ class ChecksumCanary:
     # -- compat / slow-path entry points ----------------------------------
 
     def check(self, step: int, tree) -> Optional[FaultReport]:
-        """Verify slice ``step % K`` only (single launch + scalar sync)."""
+        """Verify slice ``step % K`` only (single launch + scalar sync;
+        tables untouched, generation unchanged)."""
         chk = self._slice_indices(step)
         if not chk:
             return None
-        fn = self._fused_fn("check", step % self.n_slices)
+        fn, union = self._fused_fn("check", step % self.n_slices)
         kdigest.STATS.launches += 1
-        flag, bad, _ = fn(self._gather(tree, chk), self.reference)
+        buf, flag, bad = fn(self.plan.take_buffer(union),
+                            self._gather(tree, chk),
+                            self._tables[self._gen & 1])
+        self.plan.put_buffer(union, buf)
         if bool(kdigest.fetch(flag)):
             return self._report(step, chk, bad)
         return None
 
     def check_full(self, step: int, tree) -> Optional[FaultReport]:
-        """Verify every leaf (one launch; used off the rotating schedule)."""
+        """Verify every leaf against the read generation (one launch; only
+        meaningful right after init/refresh, off the rotating schedule)."""
         table = self.plan.digest_table(tree)
         bad = jnp.any(table != self.reference, axis=1)
         if bool(kdigest.fetch(jnp.any(bad))):
@@ -211,30 +283,59 @@ class ChecksumCanary:
 
     def arm(self, step: int, tree) -> None:
         """End-of-step: digest the slice that ``check(step+1, ...)`` will
-        verify (single launch, no host sync).  Together with ``check`` this
-        is the rotating canary; ``check_and_arm`` fuses both into one
-        launch."""
+        verify into the next generation (single launch, no host sync).
+        Together with ``check`` this is the rotating canary;
+        ``check_and_arm`` fuses both into one launch."""
         arm = self._slice_indices(step + 1)
         if not arm:
             return
-        fn = self._fused_fn("arm", step % self.n_slices)
+        fn, union = self._fused_fn("arm", step % self.n_slices)
         kdigest.STATS.launches += 1
-        _, _, self.reference = fn(self._gather(tree, arm), self.reference)
+        wslot = (self._gen + 1) & 1
+        buf, new_write = fn(self.plan.take_buffer(union),
+                            self._gather(tree, arm), self._tables[wslot])
+        self.plan.put_buffer(union, buf)
+        self._tables[wslot] = new_write
+        self._gen += 1
+
+    def arm_current(self, step: int, tree) -> None:
+        """Donated-loop arm: digest slice ``step % K`` of the live state
+        into the next generation (single launch, no sync) and bump.
+
+        Call at the TOP of the loop body, as close as possible to the step
+        that produced the buffer; ``check(step, tree)`` just before the
+        next step then verifies the same slice of the same buffer version.
+        The pair protects the buffer's whole at-rest window and never
+        needs to read it after the step donates it."""
+        self.arm(step - 1, tree)
 
     def refresh(self, tree, keys: Optional[Sequence[str]] = None) -> None:
         """Re-digest the whole reference table (or the named leaves) —
-        called after a verified repair, off the hot path."""
+        called after a verified repair or restore, off the hot path.
+
+        A full refresh BUMPS the generation and installs the fresh table
+        as the new read generation.  The bump is load-bearing under
+        donation: without it the first post-restore ``check_and_arm``
+        would verify the restored state against the stale pre-restore
+        generation and fire a spurious checksum fault (regression-tested
+        in tests/test_digest.py)."""
         if keys is None:
-            self.reference = self.plan.digest_table(tree)
+            table = self.plan.digest_table(tree)
+            self._gen += 1
+            self._tables[self._gen & 1] = table
             return
         idx = sorted(self.plan.index_of(k) for k in keys)
         if not idx:
             return
         rows = np.asarray(idx, np.int32)
-        self.reference = self.reference.at[rows].set(
-            self.plan.digest_subset(tree, idx))
+        sub = self.plan.digest_subset(tree, idx)
+        # targeted repair: patch the named rows in BOTH generations so the
+        # repair certifies regardless of which table serves the next check
+        for b in (0, 1):
+            self._tables[b] = self._tables[b].at[rows].set(sub)
 
     def reference_digests(self) -> Dict[str, np.ndarray]:
-        """Host copy of the reference table (debug/telemetry; one sync)."""
+        """Host copy of the surviving reference table (debug/telemetry;
+        one sync)."""
         table = kdigest.fetch(self.reference)
         return {k: table[i] for i, k in enumerate(self._keys)}

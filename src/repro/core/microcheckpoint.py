@@ -19,13 +19,28 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops as kops
+from repro.kernels import digest as kdigest
 
 
-def _host_copy(tree):
-    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+def host_copy(tree):
+    """Materialised host copy of a device tree, safe under donation.
+
+    Routed through a device-side temp: converting the LIVE array to
+    numpy can cache a zero-copy host view on it (the bf16 path does),
+    which pins the buffer and silently vetoes ``donate_argnums``
+    in-place reuse for the array's lifetime.  The temp absorbs the
+    view/cache and is dropped; the copy owns its bytes either way.
+    Shared by the micro-checkpointer and ``checkpoint.store`` — every
+    host copy of live state must go through here.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: np.asarray(jnp.array(x, copy=True)), tree)
+
+
+_host_copy = host_copy
 
 
 @dataclass
@@ -65,14 +80,15 @@ class MicroCheckpointer:
 
     def snapshot(self, step: int, state) -> None:
         # ONE read of the live state: the host copy is the only
-        # device→host movement; digests are computed from that copy in a
-        # single fused launch and certify exactly the bytes stored.  (On a
-        # CPU backend the copy IS the digest input — zero extra movement.
-        # On TPU this re-uploads the copy for digesting; keeping the
-        # digest on the host DMA path is the ROADMAP buffer-reuse item.)
+        # device→host movement; digests are computed FROM THAT COPY on the
+        # host (numpy uint32 wraparound, bit-identical to the kernel) and
+        # certify exactly the bytes stored.  No device re-upload: on TPU
+        # the digest rides the host DMA path, and under ``donate_argnums``
+        # loops the snapshot never competes with the step for the donated
+        # buffers.
         host = _host_copy(state)
         snap = Snapshot(step=step, state=host,
-                        digests=kops.tree_checksums(host),
+                        digests=kdigest.host_tree_checksums(host),
                         nbytes=sum(leaf.nbytes for leaf in
                                    jax.tree_util.tree_leaves(host)))
         self.snapshots.append(snap)
@@ -87,8 +103,9 @@ class MicroCheckpointer:
     def verify(self, snap: Snapshot) -> List[str]:
         """Digest-verify a snapshot before trusting it for replay
         (exact-or-abort: a rotted snapshot must not silently replay).
-        One fused digest launch over the whole snapshot."""
-        return kops.verify_tree(snap.state, snap.digests)
+        Entirely host-side — the stored bytes are hashed where they live,
+        with no device upload."""
+        return kdigest.host_verify_tree(snap.state, snap.digests)
 
     @property
     def memory_bytes(self) -> int:

@@ -78,6 +78,12 @@ class RecoveryRuntime:
     replicas    : optional callable step -> list of ≥2 healthy replica state
                   trees (pure-DP deployments); used by the TMR rung
     checkpoint  : optional (load_fn() -> (state, step)) — disk restore
+    donated     : the loop runs its step with ``donate_argnums``: on a
+                  trap the pre-step state buffers have been consumed by
+                  the step and MUST NOT be touched — the ladder pivots
+                  unconditionally to the in-HBM micro-snapshot + IV
+                  replay rung (then classic checkpoint), and replay does
+                  not consult the dead state for sharding
     """
 
     def __init__(self, *, step_fn, batch_fn, iv_registry: IVRegistry,
@@ -85,7 +91,8 @@ class RecoveryRuntime:
                  parity: Optional[ParityManager] = None,
                  replicas: Optional[Callable] = None,
                  checkpoint: Optional[Callable] = None,
-                 table: Optional[RecoveryTable] = None):
+                 table: Optional[RecoveryTable] = None,
+                 donated: bool = False):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.ivs = iv_registry
@@ -94,6 +101,7 @@ class RecoveryRuntime:
         self.replicas = replicas
         self.checkpoint = checkpoint
         self.table = table
+        self.donated = donated
         self.events: List[RecoveryEvent] = []
 
     # ------------------------------------------------------------------
@@ -182,7 +190,8 @@ class RecoveryRuntime:
         if rotten:
             raise RecoveryAbort(f"snapshot failed verification: {rotten[:3]}")
         res = replay(self.step_fn, self.batch_fn, snap.state,
-                     snap.step, step, like_state=state)
+                     snap.step, step,
+                     like_state=None if self.donated else state)
         self._last_replayed = res.steps_replayed
         return res.state, f"replayed {res.steps_replayed} steps from {snap.step}"
 
@@ -192,7 +201,7 @@ class RecoveryRuntime:
             raise RecoveryAbort("no checkpoint loader configured")
         ck_state, ck_step = self.checkpoint()
         res = replay(self.step_fn, self.batch_fn, ck_state, ck_step, step,
-                     like_state=state)
+                     like_state=None if self.donated else state)
         self._last_replayed = res.steps_replayed
         return res.state, f"restored step {ck_step} + replayed to {step}"
 
@@ -252,6 +261,11 @@ class RecoveryRuntime:
 
     def _ladder(self, report: FaultReport) -> List[str]:
         """Choose the ladder from the Recovery Table (or the default)."""
+        if self.donated:
+            # the pre-step state was donated into the step — there are no
+            # live buffers for the in-place rungs (Eq.(1), TMR, parity) to
+            # read or repair: pivot straight to snapshot + IV replay
+            return [RUNG_REPLAY, RUNG_CHECKPOINT]
         if self.table is not None and report.leaves:
             entry = self.table.lookup(report.leaves[0])
             if entry is not None:

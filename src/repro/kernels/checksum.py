@@ -82,6 +82,43 @@ def _row_checksum_batch_kernel(x_ref, out_ref):
     out_ref[..., 1] = jnp.sum(x * lane[None, :, :], axis=2, dtype=jnp.int32)
 
 
+def pack_rows(buf: jnp.ndarray, flats, starts, *, interpret: bool = True):
+    """In-place scatter of leaf bit-streams into the persistent packing
+    buffer (DESIGN.md §4.2 buffer reuse).
+
+    buf    : flat int32 packing buffer — ALIASED into the output
+             (``input_output_aliases={0: 0}``), so when the caller's jit
+             donates it the pack is a true in-place write: zero new device
+             allocations per digest in steady state.
+    flats  : flat int32 views of the leaves (``ref.to_i32`` output).
+    starts : static element offset of each flat within ``buf`` (the plan's
+             row-aligned layout).
+
+    Only the leaf ranges are written; the inter-leaf fill and the tail pad
+    are zero-initialised once at buffer creation and never touched again
+    (leaf sizes are plan constants, so the zero regions are invariant).
+    Compiled-TPU note: the un-gridded whole-buffer form below is the
+    interpret/CPU path; a compiled TPU pack would keep ``buf`` in HBM
+    (``memory_space=pltpu.HBM``) and DMA per leaf — see DESIGN.md
+    "Follow-on work".
+    """
+    starts = tuple(int(s) for s in starts)
+
+    def kernel(*refs):
+        # refs = (buf_ref, *leaf_refs, out_ref); buf_ref is aliased to
+        # out_ref, so untouched regions keep their (zero) contents.
+        out_ref = refs[-1]
+        for leaf_ref, start in zip(refs[1:-1], starts):
+            out_ref[pl.ds(start, leaf_ref.shape[0])] = leaf_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(buf, *flats)
+
+
 def checksum_tiles(x_i32_tiles: jnp.ndarray, *, interpret: bool = True):
     """x_i32_tiles: (nt, TILE_ROWS, LANES) int32 -> (nt, 2) int32 digests."""
     nt = x_i32_tiles.shape[0]

@@ -21,12 +21,23 @@ no-fault hot path.  This module replaces that with (DESIGN.md §4.2):
   digest table (n_leaves, 2) and compare tables on device, fetching one
   scalar "any mismatch?" flag per check.  Leaf attribution via the
   leaf-index→path map happens only on the slow (fault) path.
+* **persistent packing buffer** — each (plan, leaf-subset) owns ONE
+  packing buffer for the lifetime of the plan.  The pack step is a Pallas
+  kernel with ``input_output_aliases`` (``checksum.pack_rows``) and every
+  jitted digest donates the buffer back into itself, so a steady-state
+  digest makes zero new device allocations: the same HBM range is
+  rewritten in place every step (donation-safe hot path; DESIGN.md §4.2).
+* **host digest path** — ``host_checksum``/``host_tree_checksums`` compute
+  the same Fletcher digests in numpy uint32 wraparound arithmetic,
+  bit-identical to the kernel, so micro-snapshot host DMA copies are
+  certified without re-uploading a byte to the device.
 
 Instrumentation: ``STATS`` counts launches (one per digest invocation —
-each compiled digest function contains exactly one pallas_call), host
-syncs (every device→host fetch in this module and in the canary goes
-through ``fetch``), and traces (incremented inside traced bodies, so a
-plan-cache hit provably does not retrace).
+each digest is one in-place pack + one ``row_checksums`` pallas_call,
+counted as a single fused launch), host syncs (every device→host fetch in
+this module and in the canary goes through ``fetch``), and traces
+(incremented inside traced bodies, so a plan-cache hit provably does not
+retrace).  The host digest path touches no device and counts nothing.
 """
 
 from __future__ import annotations
@@ -123,6 +134,10 @@ class DigestPlan:
         self.bytes_per_pass = self.n_tiles * TILE_ROWS * LANES * 4
         self._key_to_index = {k: i for i, k in enumerate(keys)}
         self._digest_fns: Dict[Tuple[int, ...], object] = {}
+        # donation-safe steady state: one jitted (donating) digest and one
+        # persistent packing buffer per leaf subset
+        self._jitted_fns: Dict[Tuple[int, ...], object] = {}
+        self._pack_bufs: Dict[Tuple[int, ...], jnp.ndarray] = {}
         # permutation from tree_flatten_with_path order -> sorted-key order
         self._order: Optional[List[int]] = None
 
@@ -151,9 +166,13 @@ class DigestPlan:
     # -- compiled digest over a leaf subset --------------------------------
 
     def digest_fn(self, indices: Optional[Sequence[int]] = None):
-        """jit'd ``leaves_subset -> (len(indices), 2) int32`` digest table.
+        """Traced digest core ``(pack_buf, leaves_subset) -> (pack_buf,
+        (len(indices), 2) int32 table)``.
 
         ``indices`` selects plan leaves (canonical order); None = all.
+        The returned function is pure/traceable: callers embed it in their
+        own jit and donate the packing buffer at THEIR jit boundary (the
+        canary does; ``digest_table`` below wraps it for direct use).
         Cached per subset, so the hot path never retraces.
         """
         idx = tuple(range(self.n_leaves)) if indices is None \
@@ -169,10 +188,12 @@ class DigestPlan:
         n_rows = sum(sp.n_rows for sp in specs)
         padded_rows = -(-n_rows // TILE_ROWS) * TILE_ROWS
         nt = padded_rows // TILE_ROWS
-        # row→leaf segment map; trailing pad rows are all-zero so they
-        # contribute nothing to whichever segment they land in (use 0)
+        # row→leaf segment map; pad/fill rows stay all-zero for the life of
+        # the persistent buffer so they contribute nothing to whichever
+        # segment they land in (use 0)
         seg_ids = np.zeros(padded_rows, np.int32)
         offsets = np.zeros(padded_rows, np.int32)
+        starts: List[int] = []     # element offset of each leaf in the buf
         r = 0
         for j, sp in enumerate(specs):
             seg_ids[r:r + sp.n_rows] = j
@@ -180,54 +201,106 @@ class DigestPlan:
             # Fletcher combine: Σ(off+j)·x = off·Σx + Σj·x (mod 2^32)
             offsets[r:r + sp.n_rows] = \
                 np.arange(sp.n_rows, dtype=np.int32) * np.int32(LANES)
+            starts.append(r * LANES)
             r += sp.n_rows
         n_seg = len(specs)
 
-        def digest(leaves):
+        def digest(buf, leaves):
             STATS.traces += 1          # trace-time only: counts cache misses
-            # row-aligned packing: raw flats + constant zero fillers in one
-            # concatenate (a jnp.pad per leaf costs a full extra copy each)
-            parts = []
-            for sp, leaf in zip(specs, leaves):
-                flat = _ref.to_i32(leaf)
-                parts.append(flat)
-                fill = sp.n_rows * LANES - flat.shape[0]
-                if fill:
-                    parts.append(jnp.zeros((fill,), jnp.int32))
-            tail = (padded_rows - n_rows) * LANES
-            if tail:
-                parts.append(jnp.zeros((tail,), jnp.int32))
-            buf = (jnp.concatenate(parts) if len(parts) > 1 else parts[0]) \
-                .reshape(nt, TILE_ROWS, LANES)
-            d = _ck.row_checksums(buf, interpret=_interpret()) \
+            # in-place row-aligned packing into the persistent buffer: only
+            # the leaf ranges are written (fill/tail rows are permanently
+            # zero), and input_output_aliases + caller donation make the
+            # write allocation-free in steady state
+            flats = [_ref.to_i32(leaf) for leaf in leaves]
+            buf = _ck.pack_rows(buf, flats, starts, interpret=_interpret())
+            d = _ck.row_checksums(buf.reshape(nt, TILE_ROWS, LANES),
+                                  interpret=_interpret()) \
                 .reshape(padded_rows, 2)
             seg = jnp.asarray(seg_ids)
             s1 = segment_sum(d[:, 0], seg, num_segments=n_seg)
             s2 = segment_sum(d[:, 1] + jnp.asarray(offsets) * d[:, 0],
                              seg, num_segments=n_seg)
-            return jnp.stack([s1, s2], axis=1)
+            return buf, jnp.stack([s1, s2], axis=1)
 
-        return jax.jit(digest)
+        return digest
+
+    # -- persistent packing buffers ----------------------------------------
+
+    def take_buffer(self, indices: Optional[Sequence[int]] = None
+                    ) -> jnp.ndarray:
+        """The subset's packing buffer, to be donated into a digest call;
+        pair with ``put_buffer`` on the returned alias.  A take/put pair
+        REGISTERS the subset as hot-path-persistent (the canary's
+        rotating slices); subsets digested via ``digest_table``/
+        ``digest_subset`` without prior registration stay transient, so
+        off-hot-path full-state digests do not pin packed-state HBM."""
+        idx = tuple(range(self.n_leaves)) if indices is None \
+            else tuple(indices)
+        buf = self._pack_bufs.get(idx)
+        if buf is None or buf.is_deleted():
+            n_rows = sum(self.specs[i].n_rows for i in idx)
+            padded = -(-n_rows // TILE_ROWS) * TILE_ROWS * LANES
+            buf = jnp.zeros((padded,), jnp.int32)
+            self._pack_bufs[idx] = buf
+        return buf
+
+    def put_buffer(self, indices: Optional[Sequence[int]],
+                   buf: jnp.ndarray) -> None:
+        """Store the donated-through buffer back as the subset's live one."""
+        idx = tuple(range(self.n_leaves)) if indices is None \
+            else tuple(indices)
+        self._pack_bufs[idx] = buf
+
+    def buffer_pointer(self, indices: Optional[Sequence[int]] = None):
+        """Device address of the subset's packing buffer (None before first
+        use) — the benchmark's steady-state buffer-reuse probe."""
+        idx = tuple(range(self.n_leaves)) if indices is None \
+            else tuple(indices)
+        buf = self._pack_bufs.get(idx)
+        return None if buf is None else buf.unsafe_buffer_pointer()
+
+    def _jitted_digest(self, idx: Tuple[int, ...]):
+        fn = self._jitted_fns.get(idx)
+        if fn is None:
+            fn = jax.jit(self.digest_fn(idx), donate_argnums=(0,))
+            self._jitted_fns[idx] = fn
+        return fn
+
+    def _run(self, idx: Tuple[int, ...], leaves) -> jnp.ndarray:
+        STATS.launches += 1
+        # persist the packing buffer only for subsets the hot path has
+        # registered via take/put (the canary's rotating slices): the
+        # off-hot-path full-state digests (snapshot certification, canary
+        # init/refresh) would otherwise pin ~1x packed-state HBM for the
+        # plan's lifetime — eating the very saving donation buys
+        persist = idx in self._pack_bufs
+        buf, table = self._jitted_digest(idx)(self.take_buffer(idx), leaves)
+        if persist:
+            self.put_buffer(idx, buf)
+        else:
+            del self._pack_bufs[idx]
+        return table
 
     # -- public digesting --------------------------------------------------
 
     def digest_table(self, tree) -> jnp.ndarray:
-        """(n_leaves, 2) int32 digest table, on device.  ONE launch, zero
-        host syncs — the fused replacement for per-leaf ``checksum``."""
-        leaves = self.leaves(tree)
-        STATS.launches += 1
-        return self.digest_fn()(leaves)
+        """(n_leaves, 2) int32 digest table, on device.  ONE fused launch
+        (in-place pack + row digest), zero host syncs — the replacement
+        for per-leaf ``checksum``.  The packing buffer persists (and the
+        call is allocation-free) only for hot-path-registered subsets;
+        see ``take_buffer``."""
+        idx = tuple(range(self.n_leaves))
+        return self._run(idx, self.leaves(tree))
 
     def digest_subset(self, tree, indices: Sequence[int]) -> jnp.ndarray:
         """(len(indices), 2) digest table for the selected leaves — one
         launch covering only those leaves' tiles (the rotating-canary read
         slice)."""
-        indices = tuple(indices)
-        if not indices:
+        idx = tuple(indices)
+        if not idx:
             return jnp.zeros((0, 2), jnp.int32)
         leaves = self.leaves(tree)
-        STATS.launches += 1
-        return self.digest_fn(indices)([leaves[i] for i in indices])
+        return self._run(idx, [leaves[i] for i in idx])
 
     def digest_dict(self, tree) -> Dict[str, np.ndarray]:
         """Host-side per-leaf digests: one launch + ONE transfer (the seed
@@ -283,3 +356,54 @@ def plan_for(tree) -> DigestPlan:
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# host digest path — certify micro-snapshot host DMA copies without a
+# device re-upload (DESIGN.md §4.2).  Bit-identical to the kernel: numpy
+# uint32 arithmetic wraps mod 2^32 exactly like the int32 device math.
+# ---------------------------------------------------------------------------
+
+def _host_i32(x: np.ndarray) -> np.ndarray:
+    """Host mirror of ``ref.to_i32``: flat int32 view of the raw bits."""
+    a = np.ascontiguousarray(x)
+    if a.dtype.itemsize == 4:          # float32 / int32 / uint32: bit view
+        return a.reshape(-1).view(np.int32)
+    if a.dtype.itemsize == 2:          # bf16 / f16 / i16 / u16: zero-extend
+        return a.reshape(-1).view(np.uint16).astype(np.int32)
+    if a.dtype.itemsize == 1:          # i8 / u8: zero-extend
+        return a.reshape(-1).view(np.uint8).astype(np.int32)
+    if a.dtype == np.int64:            # truncate, as jnp astype does
+        return a.reshape(-1).astype(np.int32)
+    return np.ascontiguousarray(
+        a.astype(np.float32)).reshape(-1).view(np.int32)
+
+
+def host_checksum(x) -> np.ndarray:
+    """Fletcher digest int32[2] of a HOST array — bit-identical to
+    ``ops.checksum``/``ref.checksum_ref`` of the same bytes, with zero
+    device work (no upload, no launch, no sync)."""
+    f = _host_i32(np.asarray(x)).view(np.uint32)
+    idx = np.arange(1, f.shape[0] + 1, dtype=np.uint32)
+    s1 = np.add.reduce(f, dtype=np.uint32)
+    s2 = np.add.reduce(f * idx, dtype=np.uint32)
+    return np.array([s1, s2], dtype=np.uint32).view(np.int32)
+
+
+def host_tree_checksums(tree) -> Dict[str, np.ndarray]:
+    """Per-leaf host digests keyed by path — the snapshot-certification
+    twin of ``ops.tree_checksums``, computed on the host DMA copy."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {leaf_key(p): host_checksum(leaf) for p, leaf in flat}
+
+
+def host_verify_tree(tree, reference: Dict[str, np.ndarray]) -> List[str]:
+    """Leaf paths of a HOST tree whose digest no longer matches
+    ``reference`` — snapshot verification on the fault path, device-free."""
+    current = host_tree_checksums(tree)
+    bad = []
+    for k, ref_digest in reference.items():
+        cur = current.get(k)
+        if cur is None or not np.array_equal(cur, ref_digest):
+            bad.append(k)
+    return sorted(bad)

@@ -62,12 +62,18 @@ class ServeReport:
 
 def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
           seed: int = 0, inject_every: int = 0, verbose: bool = True,
-          canary_slices: int = 4) -> Dict:
+          canary_slices: int = 4, donate: bool = False) -> Dict:
     """Recovery-wrapped batched serving.  Detection: free trap (non-finite
     logits) + a rotating checksum canary over the decode cache —
     bit-flips in a KV cache rarely drive logits non-finite (RMSNorm masks
     magnitudes; see EXPERIMENTS.md), so the canary carries detection here
-    exactly as in training."""
+    exactly as in training.
+
+    ``donate=True`` jits the decode step with ``donate_argnums`` on the
+    cache — the production in-place KV-update setting.  The canary then
+    runs just before the decode consumes the cache (its last readable
+    moment); prefix replay never needs the donated buffer, so recovery is
+    unchanged."""
     from repro.core import ChecksumCanary
 
     m = cfg.model
@@ -85,7 +91,8 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     max_len = prompt_len + gen_tokens + 8
     prefill = jax.jit(lambda p, b: model.prefill(p, m, b, None,
                                                  max_len=max_len))
-    decode = jax.jit(lambda p, c, t: model.decode_step(p, m, c, t, None))
+    decode = jax.jit(lambda p, c, t: model.decode_step(p, m, c, t, None),
+                     donate_argnums=(1,) if donate else ())
 
     rng = random.Random(seed + 3)
     rep = ServeReport(requests=n_requests)
@@ -103,6 +110,12 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     t = 0
     last_inject = -1
     while t < gen_tokens:
+        if donate and canary:
+            # donated decode, arm half: digest slice t%K of the cache the
+            # previous decode just produced (one launch, no sync); the
+            # check below verifies the same slice of the same version
+            canary.arm_current(t, {"cache": cache})
+
         # adversary: corrupt the cache mid-decode (evaluation only; once
         # per position — a recovery retry must not be re-hit)
         if inject_every and t and t % inject_every == 0 and last_inject != t:
@@ -112,17 +125,25 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
             rep.faults_injected += 1
             last_inject = t
 
-        t0 = time.perf_counter()
-        logits, new_cache = decode(params, cache, token)
-        jax.block_until_ready(logits)
-        rep.decode_ms.append(1e3 * (time.perf_counter() - t0))
+        report = None
+        if donate and canary:
+            # donated decode, check half: the cache's last readable moment
+            # is BEFORE the step consumes it — one launch + one scalar
+            # sync verifies slice t%K against the arm at the loop top
+            report = canary.check(t, {"cache": cache})
 
-        # fused rotating canary — one launch + one scalar sync per token:
-        # verify slice t%K of the cache the decode just consumed, arm
-        # slice (t+1)%K of the fresh cache
-        report = canary.check_and_arm(t, {"cache": cache},
-                                      {"cache": new_cache}) \
-            if canary else None
+        if report is None:
+            t0 = time.perf_counter()
+            logits, new_cache = decode(params, cache, token)
+            jax.block_until_ready(logits)
+            rep.decode_ms.append(1e3 * (time.perf_counter() - t0))
+
+            if canary and not donate:
+                # fused rotating canary — one launch + one scalar sync per
+                # token: verify slice t%K of the cache the decode just
+                # consumed, arm slice (t+1)%K of the fresh cache
+                report = canary.check_and_arm(t, {"cache": cache},
+                                              {"cache": new_cache})
 
         ok = report is None and bool(jnp.isfinite(logits).all())
         if ok:
@@ -163,6 +184,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--inject", type=int, default=0,
                     help="corrupt the cache every N generated tokens")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate the decode cache into the step (in-place "
+                         "KV update); the canary checks pre-decode")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -170,7 +194,7 @@ def main():
         cfg = cfg.smoke()
     out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
                 gen_tokens=args.gen, seed=args.seed,
-                inject_every=args.inject)
+                inject_every=args.inject, donate=args.donate)
     print(json.dumps(out, indent=1))
 
 

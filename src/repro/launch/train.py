@@ -84,16 +84,24 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           checkpoint_dir: Optional[str] = None, checkpoint_interval: int = 50,
           inject_every: int = 0, inject_target: str = "params",
           canary_slices: int = 4, detectors: bool = True,
-          verbose: bool = True) -> Dict:
-    """Run the recovery-wrapped loop; returns the loop report dict."""
+          donate: bool = False, verbose: bool = True) -> Dict:
+    """Run the recovery-wrapped loop; returns the loop report dict.
+
+    ``donate=True`` is the production compilation setting: the step is
+    jitted with ``donate_argnums=(0,)`` so XLA updates the train state in
+    place (half the state HBM).  The resilient path stays donation-safe:
+    the canary runs at the pre-step buffer's last readable moment (just
+    before the step consumes it) with its double-buffered reference table,
+    and on ANY trap recovery pivots to the in-HBM micro-snapshot + IV
+    replay rung — the trap path never touches a donated buffer.  With
+    ``donate=False`` the loop is bit-identical to the pre-donation driver.
+    """
     key = jax.random.PRNGKey(seed)
     pipe = TokenPipeline(cfg.model.vocab_size, seq_len, global_batch,
                          seed=seed)
     state = make_train_state(cfg, key, global_batch=global_batch)
-    # NOTE: no donate_argnums here — the recovery path must still read the
-    # pre-step state after a trap fires (production TPU runs donate and keep
-    # the in-HBM snapshot instead).
-    step_fn = jax.jit(make_train_step(cfg, global_batch=global_batch))
+    step_fn = jax.jit(make_train_step(cfg, global_batch=global_batch),
+                      donate_argnums=(0,) if donate else ())
     bfn = lambda s: batch_for(cfg, pipe, s)
 
     micro = MicroCheckpointer(interval=snapshot_interval)
@@ -103,7 +111,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     runtime = RecoveryRuntime(
         step_fn=step_fn,
         batch_fn=bfn, iv_registry=promote(cfg, global_batch), micro=micro,
-        checkpoint=ckpt.loader(state) if ckpt else None)
+        checkpoint=ckpt.loader(state) if ckpt else None,
+        donated=donate)
     canary = ChecksumCanary(state, n_slices=canary_slices) \
         if detectors else None
 
@@ -116,6 +125,13 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
 
     s = 0
     while s < steps:
+        if donate and canary is not None:
+            # donated hot path, arm half: digest slice s%K of the buffer
+            # the previous step just produced (one launch, no sync);
+            # check(s) below verifies the SAME slice of the SAME buffer
+            # version right before the step consumes it
+            canary.arm_current(s, state)
+
         micro.record_iv(s, state["iv"])
         micro.maybe_snapshot(s, state)
         if ckpt:
@@ -129,32 +145,41 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             rep.faults_injected += 1
             last_inject = s
 
-        t0 = time.perf_counter()
-        new_state, metrics = step_fn(state, bfn(s))
-        jax.block_until_ready(metrics["loss"])
-        rep.step_seconds.append(time.perf_counter() - t0)
-
         report = None
-        if detectors:
-            report = trap_nonfinite(s, metrics) or \
-                trap_loss_spike(s, metrics, history)
-            if report is None and canary is not None:
-                # fused rotating canary — ONE launch + ONE scalar sync:
-                # verify the pre-step state's slice (armed at the end of an
-                # earlier step: was the state rotted while at rest / in
-                # use?) and digest the fresh output's next-check slice
-                report = canary.check_and_arm(s, state, new_state)
+        if donate and canary is not None:
+            # donated hot path, check half: the step is about to CONSUME
+            # the state buffers, so this is their last readable moment —
+            # one launch + ONE scalar sync verifies slice s%K against the
+            # generation armed at the top of this loop body
+            report = canary.check(s, state)
 
         if report is None:
-            state = new_state
-            loss = float(metrics["loss"])
-            history.append(loss)
-            rep.losses.append(loss)
-            if verbose and s % max(1, steps // 10) == 0:
-                print(f"[train] step {s:5d} loss {loss:.4f}")
-            s += 1
-            rep.steps += 1
-            continue
+            t0 = time.perf_counter()
+            new_state, metrics = step_fn(state, bfn(s))
+            jax.block_until_ready(metrics["loss"])
+            rep.step_seconds.append(time.perf_counter() - t0)
+
+            if detectors:
+                report = trap_nonfinite(s, metrics) or \
+                    trap_loss_spike(s, metrics, history)
+                if report is None and not donate and canary is not None:
+                    # fused rotating canary — ONE launch + ONE scalar sync:
+                    # verify the pre-step state's slice (armed at the end
+                    # of an earlier step: was the state rotted while at
+                    # rest / in use?) and digest the fresh output's
+                    # next-check slice
+                    report = canary.check_and_arm(s, state, new_state)
+
+            if report is None:
+                state = new_state
+                loss = float(metrics["loss"])
+                history.append(loss)
+                rep.losses.append(loss)
+                if verbose and s % max(1, steps // 10) == 0:
+                    print(f"[train] step {s:5d} loss {loss:.4f}")
+                s += 1
+                rep.steps += 1
+                continue
 
         # ---------------- recovery path (off hot path) -------------------
         rep.faults_detected += 1
@@ -204,6 +229,10 @@ def main():
                     choices=["params", "opt", "iv"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--snapshot-interval", type=int, default=8)
+    ap.add_argument("--donate", action="store_true",
+                    help="jit the step with donate_argnums=(0,) — the "
+                         "production in-place-update setting; recovery "
+                         "pivots to snapshot+replay")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -215,7 +244,8 @@ def main():
                 snapshot_interval=args.snapshot_interval,
                 checkpoint_dir=args.ckpt_dir,
                 inject_every=args.inject,
-                inject_target=args.inject_target)
+                inject_target=args.inject_target,
+                donate=args.donate)
     print(json.dumps(out, indent=1) if args.json else out)
 
 

@@ -1,0 +1,173 @@
+"""Seeded end-to-end injection-conformance suite (paper §5.1 methodology).
+
+FlipTracker-style validation: instead of sampling random flips and
+trusting the classifier, every plan below is CONSTRUCTED so its physical
+outcome is forced, and the Benign/Crash/SDC/Hang classifier plus the
+recovery ladder are asserted against that independently-known ground
+truth — under the stock loop, the canary loop, and the donated
+(``donate_argnums``) production loop.
+
+Ground-truth reasoning per plan (tiny iterpro-100m smoke config, seed 0):
+
+* ``norm-scale-b30`` — flips exponent bit 30 of ``final_norm/scale[3]``
+  (a value ~1e-7 → ~3e31): the output norm scales logits past float32
+  softmax range, so the loss goes non-finite within the injected step.
+  The FREE trap must catch it (the paper's SIGSEGV analogue).
+* ``ffn-b30-dormant`` — bit 30 of one ``ffn/up/w`` weight (~0.02 →
+  ~1e37): RMSNorm structurally renormalises the exploded channel, the
+  loss stays finite and close — free traps are blind, the trajectory
+  silently diverges => SDC.  The canary converts it into an immediately
+  detected, exactly recovered crash.
+* ``wq-b27-benign`` — bit 27 of one attention weight (~1e-2 relative
+  nudge of a single scalar): horizon loss within 1e-5 relative of truth
+  => benign under free traps.  Still a persistent flip, so the canary
+  reports it (crash + exact recovery) — detection coverage exceeds the
+  paper's.
+* ``iv-step-b12`` — bit 12 of the ``iv/step`` counter: invisible to the
+  loss at this horizon (benign under free traps); the canary localises
+  it to the IV block, where the NON-donated ladder repairs via the
+  Eq. (1) partner rung — and the DONATED ladder must pivot to the
+  in-HBM snapshot + replay rung unconditionally (the pre-step state was
+  consumed by the step).
+
+All crashes must recover to a BIT-EXACT trajectory (trial.exact): the
+continued run equals the never-faulted run bit for bit.
+"""
+
+import os
+import sys
+
+# the campaign engine lives in benchmarks/ (shared with the paper-table
+# benchmarks); make the repo root importable under pytest
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import random
+
+import pytest
+
+from benchmarks._campaign import Campaign, summarize
+from repro.core import InjectionPlan
+from repro.core.recovery_table import RUNG_EQ1, RUNG_REPLAY
+
+pytestmark = pytest.mark.slow
+
+TOTAL_STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def campaign():
+    """Tiny config + fault-free ground-truth trajectory (8 steps)."""
+    return Campaign(total_steps=TOTAL_STEPS, snapshot_interval=2, seed=0)
+
+
+# (name, plan, expected outcome per detection regime)
+#   traps    = free traps only (paper §5.2 setup)
+#   canary   = + rotating checksum canary, K=1, donate=False
+#   donated  = + canary, donate=True (production compilation)
+# expected := (outcome, detector, recovered, exact, rung)
+CASES = [
+    ("norm-scale-b30",
+     InjectionPlan("final_norm/scale", 3, 30, 2, "params"),
+     {"traps":   ("crash", "nonfinite", True, True, RUNG_REPLAY),
+      "canary":  ("crash", "nonfinite", True, True, RUNG_REPLAY),
+      "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
+    ("ffn-b30-dormant",
+     InjectionPlan("groups/0/0/ffn/up/w", 1000, 30, 3, "params"),
+     {"traps":   ("sdc", "", False, False, ""),
+      "canary":  ("crash", "checksum", True, True, RUNG_REPLAY),
+      "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
+    ("wq-b27-benign",
+     InjectionPlan("groups/0/0/attn/wq/w", 500, 27, 2, "params"),
+     {"traps":   ("benign", "", False, False, ""),
+      "canary":  ("crash", "checksum", True, True, RUNG_REPLAY),
+      "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
+    ("iv-step-b12",
+     InjectionPlan("step", 0, 12, 2, "iv"),
+     {"traps":   ("benign", "", False, False, ""),
+      "canary":  ("crash", "checksum", True, True, RUNG_EQ1),
+      "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
+]
+
+REGIMES = {"traps": dict(use_canary=False, donate=False),
+           "canary": dict(use_canary=True, donate=False),
+           "donated": dict(use_canary=True, donate=True)}
+
+
+@pytest.mark.parametrize("name,plan,expected",
+                         CASES, ids=[c[0] for c in CASES])
+@pytest.mark.parametrize("regime", list(REGIMES))
+def test_outcome_conformance(campaign, name, plan, expected, regime):
+    """Classifier + ladder conformance against constructed ground truth."""
+    want_outcome, want_detector, want_rec, want_exact, want_rung = \
+        expected[regime]
+    trial = campaign.run_trial(random.Random(0), plan=plan,
+                               canary_slices=1, **REGIMES[regime])
+    assert trial.outcome == want_outcome, (name, regime, trial)
+    assert trial.detector == want_detector, (name, regime, trial)
+    assert trial.recovered == want_rec, (name, regime, trial)
+    if want_rec:
+        # detected crashes recover to a BIT-EXACT trajectory
+        assert trial.exact == want_exact, (name, regime, trial)
+        assert trial.rung == want_rung, (name, regime, trial)
+        # detection is near-immediate (paper: ≤50 instructions; here:
+        # within one step of the injection)
+        assert 0 <= trial.latency_steps <= 1, (name, regime, trial)
+
+
+def test_classifier_aggregate_matches_ground_truth(campaign):
+    """The summarize() table over the fixed plan list must reproduce the
+    per-plan ground truth exactly (no hangs, canary converts every
+    silent corruption into a recovered crash)."""
+    rng = random.Random(0)
+    traps = summarize([campaign.run_trial(rng, plan=p, use_canary=False)
+                       for _, p, _ in CASES])
+    assert traps["outcomes"] == {"crash": 1, "sdc": 1, "benign": 2}
+    assert traps["outcomes"].get("hang", 0) == 0
+    assert traps["crash_symptoms"] == {"nonfinite": 1}
+
+    canary = summarize([campaign.run_trial(rng, plan=p, use_canary=True,
+                                           canary_slices=1)
+                        for _, p, _ in CASES])
+    assert canary["outcomes"] == {"crash": 4}
+    assert canary["recovered"] == 4
+    assert canary["exact"] == 4 and canary["exact_rate"] == 1.0
+
+    donated = summarize([campaign.run_trial(rng, plan=p, use_canary=True,
+                                            canary_slices=1, donate=True)
+                         for _, p, _ in CASES])
+    assert donated["outcomes"] == {"crash": 4}
+    assert donated["recovered"] == 4 and donated["exact"] == 4
+    # the donated ladder NEVER uses an in-place rung — unconditional
+    # pivot to the in-HBM snapshot + replay
+    assert set(donated["by_rung"]) == {RUNG_REPLAY}
+
+
+def test_donated_sweep_recovers_via_replay_only(campaign):
+    """Sampled (size-weighted) donated sweep: every detected crash must
+    recover bit-exactly through the snapshot+replay pivot — an in-place
+    rung firing under donation would mean the runtime touched a donated
+    buffer."""
+    trials = campaign.run(6, seed=11, use_canary=True, canary_slices=1,
+                          donate=True)
+    crashes = [t for t in trials if t.outcome == "crash"]
+    assert crashes, "sweep produced no detected crash"
+    for t in crashes:
+        assert t.recovered and t.exact, t
+        assert t.rung == RUNG_REPLAY, t
+
+
+def test_donated_and_stock_loops_agree_bitwise(campaign):
+    """donate_argnums must not change the math: the donated fault-free
+    trajectory equals the stock trajectory bit for bit."""
+    state = campaign.clone(campaign.states[0])
+    dstep = campaign.donated_step()
+    for s in range(TOTAL_STEPS):
+        state, _ = dstep(state, campaign.bfn(s))
+    assert campaign._digest(state) == campaign.final_digest
+
+
+def test_care_mode_rejects_donation(campaign):
+    """CARE diagnoses the live IV block — undefined once the step has
+    consumed it; the campaign must refuse the combination loudly."""
+    with pytest.raises(ValueError):
+        campaign.run_trial(random.Random(0), mode="care", donate=True)
