@@ -95,6 +95,7 @@ class Campaign:
         self.bfn = lambda s: self.pipe.batch_at(s)
         self.step = jax.jit(make_train_step(self.cfg, global_batch=B))
         self._donated_step = None    # built lazily: donate_argnums=(0,)
+        self._raw_step = None        # built lazily: unjitted (fused detect)
 
         # fault-free reference trajectory (ground truth for benign/SDC/exact)
         state = make_train_state(self.cfg, jax.random.PRNGKey(seed),
@@ -128,6 +129,15 @@ class Campaign:
                 donate_argnums=(0,))
         return self._donated_step
 
+    def raw_step(self):
+        """The UNJITTED step function, for in-step fused detection: the
+        ``FusedStepFactory`` jits it together with the canary check/arm.
+        One function object for the campaign's lifetime, so the factory's
+        global executable cache never recompiles across trials."""
+        if self._raw_step is None:
+            self._raw_step = make_train_step(self.cfg, global_batch=self.B)
+        return self._raw_step
+
     # ------------------------------------------------------------------
 
     def run_trial(self, rng: random.Random, mode: str = "iterpro",
@@ -135,7 +145,8 @@ class Campaign:
                   use_canary: bool = False,
                   canary_slices: int = 4,
                   plan: Optional[InjectionPlan] = None,
-                  donate: bool = False) -> Trial:
+                  donate: bool = False,
+                  fused: bool = False) -> Trial:
         """One injection trial.
 
         ``plan``   : fixed InjectionPlan (its ``step`` is the injection
@@ -145,10 +156,17 @@ class Campaign:
                      canary switches to the arm-before/check-after pair
                      around the adversary window, and recovery pivots to
                      snapshot + replay (RecoveryRuntime(donated=True)).
+        ``fused``  : in-step fused detection (implies ``use_canary``): the
+                     canary check/arm ride the step's own launch
+                     (``ChecksumCanary.fuse_into_step``); detection step
+                     indices, attribution and recovery semantics must
+                     conform to the pair/check_and_arm paths.
         """
         if mode == "care" and donate:
             raise ValueError("care mode diagnoses the live IV block and is "
                              "not defined for a donated loop")
+        if fused:
+            use_canary = True
         if plan is None:
             tgt = target or rng.choices(["params", "opt", "iv"],
                                         weights=[0.55, 0.40, 0.05])[0]
@@ -174,6 +192,8 @@ class Campaign:
             state = self.clone(state)
         canary = ChecksumCanary(self.states[t0], n_slices=canary_slices) \
             if use_canary else None
+        factory = canary.fuse_into_step(self.raw_step(), donate=donate) \
+            if fused else None
         # bounded: the spike trap reads only the last LOSS_WINDOW losses
         history = deque(self.losses[:t0], maxlen=LOSS_WINDOW)
 
@@ -183,7 +203,7 @@ class Campaign:
             if s > t0:
                 micro.maybe_snapshot(s, state)
                 micro.record_iv(s, state["iv"])
-            if donate and canary is not None:
+            if donate and canary is not None and factory is None:
                 # donated protocol: slice s%K was armed when this buffer
                 # was the previous step's fresh output (for s == t0: at
                 # canary construction); verify it at its last readable
@@ -191,14 +211,24 @@ class Campaign:
                 report = canary.check(s, state)
                 if report is not None:
                     break
-            new_state, metrics = step_fn(state, self.bfn(s))
-            if donate and canary is not None:
+            if factory is not None:
+                # in-step fused: check slice s%K of the input + arm slice
+                # (s+1)%K of the output inside the step's own launch; on a
+                # report the output is corrupt-derived and discarded
+                new_state, metrics, report = factory.step(
+                    s, state, self.bfn(s))
+                if report is not None:
+                    break
+            else:
+                new_state, metrics = step_fn(state, self.bfn(s))
+            if donate and canary is not None and factory is None:
                 # arm half: digest slice (s+1)%K of the fresh output (one
                 # launch, no sync) — next iteration's check verifies it
                 canary.arm_current(s + 1, new_state)
             report = trap_nonfinite(s, metrics) or \
                 trap_loss_spike(s, metrics, history)
-            if report is None and not donate and canary is not None:
+            if report is None and not donate and canary is not None \
+                    and factory is None:
                 # fused rotating canary: ONE launch + ONE scalar sync —
                 # verify slice s%K of the (pre-step) state the step just
                 # consumed, arm slice (s+1)%K of its output
@@ -270,11 +300,12 @@ class Campaign:
     def run(self, n_trials: int, mode: str = "iterpro",
             target: Optional[str] = None, seed: int = 1,
             use_canary: bool = False, canary_slices: int = 4,
-            donate: bool = False) -> List[Trial]:
+            donate: bool = False, fused: bool = False) -> List[Trial]:
         rng = random.Random(seed)
         return [self.run_trial(rng, mode=mode, target=target,
                                use_canary=use_canary,
-                               canary_slices=canary_slices, donate=donate)
+                               canary_slices=canary_slices, donate=donate,
+                               fused=fused)
                 for _ in range(n_trials)]
 
 

@@ -28,7 +28,8 @@ from repro.kernels import ops as kops
 
 
 def _loop(campaign: Campaign, steps: int, *, traps: bool, canary_k: int,
-          snapshots: bool, donate: bool = False) -> float:
+          snapshots: bool, donate: bool = False,
+          fused: bool = False) -> float:
     """Returns steps/sec over `steps` warm steps."""
     state = campaign.states[0]
     if donate:
@@ -39,17 +40,32 @@ def _loop(campaign: Campaign, steps: int, *, traps: bool, canary_k: int,
     else:
         step_fn = campaign.step
     canary = ChecksumCanary(state, n_slices=canary_k) if canary_k else None
+    factory = canary.fuse_into_step(campaign.raw_step(), donate=donate) \
+        if fused and canary is not None else None
     micro = MicroCheckpointer(interval=2) if snapshots else None
     history = deque(maxlen=LOSS_WINDOW)   # bounded: the trap only ever
     # reads the last LOSS_WINDOW values
     # warm the step and one full canary rotation (compiles the K fused
     # step functions once; steady-state per-step cost is what we measure)
-    if donate:
+    s0 = 0
+    if factory is not None:
+        # AOT-compile all K rotation executables, then settle one full
+        # rotation THROUGH the factory so every executable has run once
+        # before the timer starts (matching the execution-warmed unfused
+        # rows); stepping via the factory keeps the canary table and the
+        # state version in lockstep, so the timed loop resumes at s=K
+        factory.warm(state, campaign.bfn(0))
+        for s in range(canary.n_slices):
+            state, m, _ = factory.step(s, state, campaign.bfn(s))
+        jax.block_until_ready(m["loss"])
+        s0 = canary.n_slices
+    elif donate:
         state, m = step_fn(state, campaign.bfn(0))
+        jax.block_until_ready(m["loss"])
     else:
         st, m = step_fn(state, campaign.bfn(0))
-    jax.block_until_ready(m["loss"])
-    if canary is not None:
+        jax.block_until_ready(m["loss"])
+    if canary is not None and factory is None:
         for s in range(canary.n_slices):
             if donate:
                 canary.arm_current(s, state)
@@ -57,24 +73,29 @@ def _loop(campaign: Campaign, steps: int, *, traps: bool, canary_k: int,
             else:
                 canary.check_and_arm(s, state)
     t0 = time.perf_counter()
-    for s in range(steps):
-        if canary is not None and donate:
+    for s in range(s0, s0 + steps):
+        if canary is not None and donate and factory is None:
             # donated pair, arm half: digest slice s%K of the buffer the
             # previous step produced (one launch, no sync)
             canary.arm_current(s, state)
         if micro is not None:
             micro.maybe_snapshot(s, state)
             micro.record_iv(s, state["iv"])
-        if canary is not None and donate:
+        if canary is not None and donate and factory is None:
             # check half: verify the same slice of the same version at the
             # buffer's last readable moment (one launch + one scalar sync)
             canary.check(s, state)
-        new_state, metrics = step_fn(state, campaign.bfn(s))
+        if factory is not None:
+            # in-step fused: detection rides the step's own launch — ONE
+            # combined launch + ONE scalar sync per step
+            new_state, metrics, _ = factory.step(s, state, campaign.bfn(s))
+        else:
+            new_state, metrics = step_fn(state, campaign.bfn(s))
         if traps:
             trap_nonfinite(s, metrics) or \
                 trap_loss_spike(s, metrics, history)
             history.append(float(metrics["loss"]))
-        if canary is not None and not donate:
+        if canary is not None and not donate and factory is None:
             # one fused launch + one scalar sync: check slice s%K of the
             # pre-step state, arm slice (s+1)%K of the fresh output
             canary.check_and_arm(s, state, new_state)
@@ -238,6 +259,74 @@ def donation_steady_state(campaign: Campaign, steps: int = 16) -> Dict:
     }
 
 
+def fused_steady_state(campaign: Campaign, steps: int = 16,
+                       n_slices: int = 8) -> Dict:
+    """In-step fused detection accounting (the PR-4 tentpole contract;
+    DESIGN.md §4.2 "in-step fused" column):
+
+    * steady state (after the K-executable warmup) is EXACTLY 1 combined
+      launch + 1 scalar device→host sync per step — detection adds zero
+      dispatches to the donated step;
+    * warmup = K rotation-specialised AOT compilations (wall time and
+      count reported: the price of fusing detection into the step);
+    * zero retraces in steady state (the executable cache holds);
+    * digests bit-exact to the per-leaf oracle: the slice armed by a
+      steady-state fused step matches ``ref.checksum_ref`` of the same
+      output bytes (probed via a device-temp host copy so the probe
+      cannot veto donation).
+    """
+    from repro.kernels import ref as kref
+
+    state = campaign.clone(campaign.states[0])
+    canary = ChecksumCanary(state, n_slices=n_slices)
+    factory = canary.fuse_into_step(campaign.raw_step(), donate=True)
+    warm_s = factory.warm(state, campaign.bfn(0))
+
+    # settle one full rotation so every executable has run once
+    for s in range(n_slices):
+        state, m, rep = factory.step(s, state, campaign.bfn(s))
+        assert rep is None
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+
+    kdigest.STATS.reset()
+    t0 = time.perf_counter()
+    for s in range(n_slices, n_slices + steps):
+        state, m, rep = factory.step(s, state, campaign.bfn(s))
+        assert rep is None
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    wall = time.perf_counter() - t0
+    launches, syncs, traces = kdigest.STATS.snapshot()
+
+    # oracle probe: one more fused step; the freshly armed rows (read
+    # generation after the commit) must equal the per-leaf oracle digests
+    # of the output state's arm slice
+    s = n_slices + steps
+    new_state, m, rep = factory.step(s, state, campaign.bfn(s))
+    arm_idx = canary._slice_indices(s + 1)
+    out_leaves = canary.plan.leaves(new_state)
+    table = np.asarray(jax.numpy.array(canary.reference, copy=True))
+    oracle_exact = all(
+        np.array_equal(table[i],
+                       np.asarray(kref.checksum_ref(
+                           jax.numpy.array(out_leaves[i], copy=True))))
+        for i in arm_idx)
+
+    digested_bytes = 2 * canary.plan.bytes_per_pass / n_slices
+    return {
+        "steps": steps,
+        "n_slices": n_slices,
+        "warmup_compiles": factory.n_compiles,
+        "warmup_compile_s": factory.compile_seconds,
+        "warmup_wall_s": warm_s,
+        "launches_per_step": launches / steps,
+        "syncs_per_step": syncs / steps,
+        "retraces_per_step": traces / steps,
+        "digested_mb_per_step": digested_bytes / 1e6,
+        "steps_per_s": steps / wall,
+        "oracle_exact": bool(oracle_exact),
+    }
+
+
 def run(campaign: Campaign, steps: int = 30) -> Dict:
     base = _loop(campaign, steps, traps=False, canary_k=0, snapshots=False)
     traps = _loop(campaign, steps, traps=True, canary_k=0, snapshots=False)
@@ -250,6 +339,14 @@ def run(campaign: Campaign, steps: int = 30) -> Dict:
                   donate=True)
     dk8 = _loop(campaign, steps, traps=True, canary_k=8, snapshots=True,
                 donate=True)
+    # in-step fused detection: the canary rides the donated step's own
+    # launch (1 launch + 1 scalar sync per step after K-executable
+    # warmup).  The accounting section runs FIRST — it shares the global
+    # executable cache with the steps/s loop below, and only the first
+    # builder pays (and can report) the real K-compile warmup cost.
+    fused = fused_steady_state(campaign)
+    dfk8 = _loop(campaign, steps, traps=True, canary_k=8, snapshots=True,
+                 donate=True, fused=True)
 
     micro = MicroCheckpointer(interval=2)
     micro.snapshot(0, campaign.states[0])
@@ -260,17 +357,20 @@ def run(campaign: Campaign, steps: int = 30) -> Dict:
                         "traps+snapshots+canary_k8": k8,
                         "traps+snapshots+canary_k1": k1,
                         "donated+traps+snapshots": dbase,
-                        "donated+traps+snapshots+canary_k8": dk8},
+                        "donated+traps+snapshots+canary_k8": dk8,
+                        "donated+fused+traps+snapshots+canary_k8": dfk8},
         "overhead_pct": {
             "traps_only": 100 * (base / traps - 1),
             "traps+snapshots": 100 * (base / snaps - 1),
             "traps+snapshots+canary_k8": 100 * (base / k8 - 1),
             "traps+snapshots+canary_k1": 100 * (base / k1 - 1),
             "donated_canary_k8_vs_donated": 100 * (dbase / dk8 - 1),
+            "donated_fused_k8_vs_donated": 100 * (dbase / dfk8 - 1),
         },
         "snapshot_memory_bytes": micro.memory_bytes,
         "digest": digest_throughput(campaign),
         "donation": donation_steady_state(campaign),
+        "fused": fused,
         "note": ("canary digests run as Pallas interpret on CPU here — on "
                  "TPU the compiled kernel streams at HBM bandwidth and the "
                  "K=8 rotating canary (one fused launch + one scalar sync "
@@ -338,6 +438,30 @@ def render(out: Dict) -> str:
     lines.append(f"- donated loop: {sps[k_d]:.2f} steps/s bare vs "
                  f"{sps[k_dk8]:.2f} with canary K=8 "
                  f"({d_cost:+.1f}% canary cost under donation)")
+    fu = out["fused"]
+    lines.append("")
+    lines.append("### In-step fused detection (canary inside the donated "
+                 "step; DESIGN.md §4.2)")
+    lines.append("")
+    lines.append(f"- steady-state hot path: "
+                 f"**{fu['launches_per_step']:g} launch/step** (the step's "
+                 f"own dispatch carries the check+arm digest), "
+                 f"{fu['syncs_per_step']:g} scalar sync/step, "
+                 f"{fu['retraces_per_step']:g} retraces/step; digests "
+                 f"bit-exact to the per-leaf oracle: {fu['oracle_exact']}")
+    lines.append(f"- K-executable warmup: {fu['warmup_compiles']} "
+                 f"rotation-specialised compiles in "
+                 f"{fu['warmup_wall_s']:.2f} s wall "
+                 f"({fu['warmup_compile_s']:.2f} s compiling) for "
+                 f"K={fu['n_slices']} — the one-time price of fusing "
+                 f"detection into the step")
+    k_dfk8 = "donated+fused+traps+snapshots+canary_k8"
+    f_cost = out["overhead_pct"]["donated_fused_k8_vs_donated"]
+    lines.append(f"- donated loop: {sps[k_dfk8]:.2f} steps/s fused vs "
+                 f"{sps[k_dk8]:.2f} with the arm/check pair "
+                 f"({f_cost:+.1f}% fused canary cost vs donated bare; "
+                 f"{fu['digested_mb_per_step']:.1f} MB digested/step — "
+                 f"same bytes as the pair, half its dispatches)")
     lines.append(f"- double-buffered in-HBM snapshot memory: "
                  f"{out['snapshot_memory_bytes']/1e6:.1f} MB "
                  f"(paper: 27 MB fixed)")

@@ -21,11 +21,18 @@ def main():
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--inject", type=int, default=6,
                     help="corrupt the cache every N generated tokens")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate the decode cache into the step (in-place "
+                         "KV update); the canary checks pre-decode")
+    ap.add_argument("--fused-detect", action="store_true",
+                    help="run the cache canary INSIDE the jitted decode "
+                         "(1 combined launch + 1 scalar sync per token)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
-                gen_tokens=args.gen, inject_every=args.inject, verbose=True)
+                gen_tokens=args.gen, inject_every=args.inject, verbose=True,
+                donate=args.donate, fused_detect=args.fused_detect)
     print(json.dumps(out, indent=1))
 
 

@@ -8,6 +8,10 @@ CPU demo (reduced model, ~2 min):
 Full 100M config (the real target; slow on CPU, native on TPU):
     PYTHONPATH=src python examples/train_resilient.py --full --steps 300
 
+Production compilation (in-place state update + in-step fused detection —
+1 combined launch + 1 scalar sync per step):
+    PYTHONPATH=src python examples/train_resilient.py --donate --fused-detect
+
 Any assigned architecture works: --arch zamba2-7b (reduced automatically
 unless --full).
 """
@@ -30,6 +34,14 @@ def main():
     ap.add_argument("--inject", type=int, default=25,
                     help="inject one bit-flip every N steps")
     ap.add_argument("--ckpt-dir", default="/tmp/iterpro_ckpt")
+    ap.add_argument("--donate", action="store_true",
+                    help="production compilation: donate_argnums=(0,) "
+                         "(in-place state update; recovery pivots to "
+                         "snapshot+replay)")
+    ap.add_argument("--fused-detect", action="store_true",
+                    help="run the canary INSIDE the jitted step — 1 "
+                         "combined launch + 1 scalar sync per step "
+                         "(DESIGN.md §4.2 in-step fused)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -45,6 +57,8 @@ def main():
                 checkpoint_interval=50,
                 inject_every=args.inject,
                 canary_slices=4,
+                donate=args.donate,
+                fused_detect=args.fused_detect,
                 verbose=True)
 
     print("\n=== run report ===")

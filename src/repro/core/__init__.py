@@ -6,6 +6,7 @@ induction/icp, parity, microcheckpoint, replay) -> exact-or-abort verify.
 
 from repro.core.detect import ChecksumCanary, FaultReport, trap_loss_spike, trap_nonfinite  # noqa: F401
 from repro.core.faults import InjectionPlan, flip_bit, inject, inject_shard_loss, sample_plan  # noqa: F401
+from repro.core.fused_step import FusedStepFactory  # noqa: F401
 from repro.core.icp import promote, recoverable_iv_count  # noqa: F401
 from repro.core.induction import IVRegistry, IVSpec, RecoveryAbort  # noqa: F401
 from repro.core.microcheckpoint import MicroCheckpointer, Snapshot  # noqa: F401

@@ -13,13 +13,27 @@ Ordered by cost:
      contaminated the loss yet), giving full-state coverage every K steps.
      The hot path costs exactly one kernel launch and one scalar
      device→host sync per step, independent of the number of state leaves.
+
+Canary launch/sync contract by mode (bytes are ~2/K of the state in every
+mode; full table in DESIGN.md §4.2):
+
+  * ``check_and_arm`` (non-donated loops) — 1 fused launch + 1 scalar
+    sync per step;
+  * ``arm_current``/``check`` pair (donated loops, detection outside the
+    step) — 2 launches (only the check syncs, 1 scalar);
+  * in-step fused (``fuse_into_step`` → ``core/fused_step.py``) — the
+    check of the *input* slice and the arm of the *output* slice run
+    INSIDE the jitted (optionally donated) step: 1 combined launch + 1
+    scalar sync per step, at the cost of K rotation-specialised step
+    executables.  Leaf attribution is deferred to the fault path via
+    ``FaultReport.resolve``.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +54,20 @@ class FaultReport:
     detector: str               # 'nonfinite' | 'loss_spike' | 'checksum' | 'external'
     leaves: List[str] = field(default_factory=list)  # suspected leaf paths
     detail: str = ""
+    #: deferred leaf attribution (in-step fused detection): the hot path
+    #: fetches only the scalar mismatch flag; the per-leaf bad-mask vector
+    #: stays on device until the fault path calls ``resolve`` (one extra
+    #: transfer, fault path only).
+    resolver: Optional[Callable[[], List[str]]] = \
+        field(default=None, repr=False, compare=False)
+
+    def resolve(self) -> List[str]:
+        """Materialise ``leaves`` from a deferred attribution (no-op when
+        attribution already happened at detection time)."""
+        if self.resolver is not None:
+            self.leaves = self.resolver()
+            self.resolver = None
+        return self.leaves
 
     def __str__(self):
         where = f" leaves={self.leaves[:3]}{'...' if len(self.leaves) > 3 else ''}" \
@@ -113,9 +141,10 @@ class ChecksumCanary:
     2·(1/K) bytes per step as the fused call; the protected at-rest
     window is everything between the two dispatch points — on real
     hardware, the async-queue gap where the buffer sits in HBM.
-    Fusing the pair back into one launch *inside* the donated step (check
-    the input slice + arm the output slice within the jitted step) is the
-    named follow-on (DESIGN.md).
+    ``fuse_into_step`` collapses the pair back to ONE launch by running
+    the check of the input slice and the arm of the output slice *inside*
+    the jitted (donated) step — K rotation-specialised step executables,
+    see core/fused_step.py.
 
     ``check``/``arm`` remain as standalone entry points for callers that
     hold only one state version at a time; each is itself a single fused
@@ -173,33 +202,20 @@ class ChecksumCanary:
             return fn
         chk = self._slice_indices(r) if kind != "arm" else []
         arm = self._slice_indices(r + 1) if kind != "check" else []
-        union = tuple(chk) + tuple(arm)
-        digest = self.plan.digest_fn(union)
-        chk_rows = np.asarray(chk, np.int32)
-        arm_rows = np.asarray(arm, np.int32)
-        nc = len(chk)
+        core, union = kdigest.check_arm_subcomputation(self.plan, chk, arm)
 
         if kind == "check":
             def check_fn(buf, leaves, ref_read):
-                buf, table = digest(buf, leaves)    # ONE fused launch
-                bad = jnp.any(table[:nc] != ref_read[chk_rows], axis=1) \
-                    if nc else jnp.zeros((0,), bool)
-                return buf, jnp.any(bad), bad
+                buf, flag, bad, _ = core(buf, leaves, ref_read, ref_read)
+                return buf, flag, bad
             fn = jax.jit(check_fn, donate_argnums=(0,))
         elif kind == "arm":
             def arm_fn(buf, leaves, ref_write):
-                buf, table = digest(buf, leaves)    # ONE fused launch
-                return buf, ref_write.at[arm_rows].set(table)
+                buf, _, _, new_write = core(buf, leaves, ref_write, ref_write)
+                return buf, new_write
             fn = jax.jit(arm_fn, donate_argnums=(0, 2))
         else:
-            def step_fn(buf, leaves, ref_read, ref_write):
-                buf, table = digest(buf, leaves)    # ONE fused launch
-                bad = jnp.any(table[:nc] != ref_read[chk_rows], axis=1) \
-                    if nc else jnp.zeros((0,), bool)
-                new_write = ref_write.at[arm_rows].set(table[nc:]) \
-                    if len(arm) else ref_write
-                return buf, jnp.any(bad), bad, new_write
-            fn = jax.jit(step_fn, donate_argnums=(0, 3))
+            fn = jax.jit(core, donate_argnums=(0, 3))
         _FUSED_CACHE[key] = (fn, union)
         return fn, union
 
@@ -207,11 +223,40 @@ class ChecksumCanary:
         leaves = self.plan.leaves(tree)
         return [leaves[i] for i in indices]
 
-    def _report(self, step: int, chk: Sequence[int], bad_mask) -> FaultReport:
-        # fault path only: fetch the per-leaf mismatch vector and attribute
+    def _attribute(self, chk: Sequence[int], bad_mask) -> List[str]:
+        """Fault path only: fetch the per-leaf mismatch vector (the one
+        extra transfer) and name the corrupted leaf paths."""
         mask = kdigest.fetch(bad_mask)
-        leaves = sorted(self._keys[i] for i, b in zip(chk, mask) if b)
-        return FaultReport(step, "checksum", leaves=leaves)
+        return sorted(self._keys[i] for i, b in zip(chk, mask) if b)
+
+    def _report(self, step: int, chk: Sequence[int], bad_mask) -> FaultReport:
+        return FaultReport(step, "checksum",
+                           leaves=self._attribute(chk, bad_mask))
+
+    # -- generation-table plumbing ----------------------------------------
+    #
+    # The double-buffered reference pair is exposed through a begin/commit
+    # protocol so that detection embedded in OTHER jitted programs (the
+    # in-step fused mode, core/fused_step.py) can do the same in-place arm
+    # the standalone fused launches do: ``begin_update`` hands out the
+    # surviving read table and the donatable write table; the caller
+    # donates the write table into its program and hands the aliased
+    # result back to ``commit_update``, which installs it and bumps the
+    # generation.  Every arm in this module goes through the same pair,
+    # so the generation discipline (read table survives the donated step;
+    # ``refresh`` bumps past both) holds whether the arm happened in a
+    # standalone launch or inside the step.
+
+    def begin_update(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(read_table, write_table) for one check+arm generation: verify
+        against the first, donate the second into the arming program."""
+        return self._tables[self._gen & 1], self._tables[(self._gen + 1) & 1]
+
+    def commit_update(self, new_write: jnp.ndarray) -> None:
+        """Install the donated-through write table and bump the generation
+        (the armed rows become the next check's reference)."""
+        self._tables[(self._gen + 1) & 1] = new_write
+        self._gen += 1
 
     # -- hot path ----------------------------------------------------------
 
@@ -243,13 +288,11 @@ class ChecksumCanary:
             return None
         fn, union = self._fused_fn("check_arm", r)
         kdigest.STATS.launches += 1
-        wslot = (self._gen + 1) & 1
+        ref_read, ref_write = self.begin_update()
         buf, flag, bad, new_write = fn(
-            self.plan.take_buffer(union), leaves,
-            self._tables[self._gen & 1], self._tables[wslot])
+            self.plan.take_buffer(union), leaves, ref_read, ref_write)
         self.plan.put_buffer(union, buf)
-        self._tables[wslot] = new_write
-        self._gen += 1
+        self.commit_update(new_write)
         if bool(kdigest.fetch(flag)):       # the step's ONE host sync
             return self._report(step, chk, bad)
         return None
@@ -291,12 +334,34 @@ class ChecksumCanary:
             return
         fn, union = self._fused_fn("arm", step % self.n_slices)
         kdigest.STATS.launches += 1
-        wslot = (self._gen + 1) & 1
+        _, ref_write = self.begin_update()
         buf, new_write = fn(self.plan.take_buffer(union),
-                            self._gather(tree, arm), self._tables[wslot])
+                            self._gather(tree, arm), ref_write)
         self.plan.put_buffer(union, buf)
-        self._tables[wslot] = new_write
-        self._gen += 1
+        self.commit_update(new_write)
+
+    def fuse_into_step(self, step_fn, *, donate: bool = False,
+                       warm: str = "lazy"):
+        """Wrap ``step_fn(state, *args) -> (new_state, aux)`` so the canary
+        check of the *input* state's slice ``s % K`` and the arm of the
+        *output* state's slice ``(s+1) % K`` run INSIDE the jitted step —
+        true 1-launch/step detection, donated or not (DESIGN.md §4.2
+        "in-step fused" column).
+
+        ``state`` must match this canary's plan structure; extra ``*args``
+        (batch, params, ...) pass through untouched.  ``donate=True``
+        donates the state into the step (the production in-place-update
+        setting) — XLA schedules the input-slice digest reads before the
+        donated in-place writes, which is what lets one launch span both
+        state versions.  ``warm`` is the K-executable compilation knob:
+        ``'eager'`` compiles all K rotation-specialised executables at the
+        first call, ``'lazy'`` compiles each rotation on first use.
+
+        Returns a ``FusedStepFactory`` (core/fused_step.py); drive it with
+        ``factory.step(s, state, *args) -> (new_state, aux, report)``.
+        """
+        from repro.core.fused_step import FusedStepFactory
+        return FusedStepFactory(step_fn, self, donate=donate, warm=warm)
 
     def arm_current(self, step: int, tree) -> None:
         """Donated-loop arm: digest slice ``step % K`` of the live state

@@ -1,0 +1,239 @@
+"""In-step fused detection under donation — the step carries its own canary.
+
+PR 3 made the rotating checksum canary donation-safe by splitting the
+check/arm pair around the step (``arm_current`` after the step produces a
+buffer, ``check`` just before the next step consumes it): 2 launches/step.
+This module inverts the control flow — instead of the runtime calling the
+digest around the step, the *step function itself* is wrapped so that
+
+  * the digest of canary slice ``s % K`` of the INPUT state (the check),
+  * the user step, and
+  * the digest of slice ``(s+1) % K`` of the OUTPUT state (the arm)
+
+are one jitted program per rotation ``r = s % K``.  XLA's dataflow
+scheduling orders the input-slice digest reads before the donated in-place
+writes, so the pre- and post-step state versions CAN meet in one launch —
+the thing the host-side pair could never do across a donated dispatch.
+
+Launch/sync/byte contract (DESIGN.md §4.2, "in-step fused" column):
+
+  * 1 combined launch/step (the step's own dispatch; detection adds zero
+    extra launches) — down from 2 (donated pair) or from 1 step + 1
+    digest launch (non-donated ``check_and_arm``);
+  * 1 scalar "any mismatch?" device→host sync/step; the per-leaf bad-mask
+    vector stays on device until the fault path resolves attribution
+    (``FaultReport.resolve``);
+  * ~2/K of the state's bytes digested per step — unchanged;
+  * 0 steady-state device allocations on the digest path: the persistent
+    packing buffer and the write-generation reference table are donated
+    through every call, exactly as in the standalone fused launches.
+
+The price is K rotation-specialised compilations of the step: each
+rotation digests a different leaf subset, so each is its own executable.
+``FusedStepFactory`` AOT-compiles (``jit(...).lower(...).compile()``) and
+caches the K executables globally — keyed by (plan, K, step_fn, donate,
+rotation, arg shapes) so campaign-style callers that build one factory
+per trial over the same structure never recompile — and warms them
+eagerly or lazily per the ``warm`` knob.  After warmup the hot path never
+retraces (``kernels.digest.STATS.traces`` stays flat).
+
+Detection semantics are bit-identical to the non-donated
+``check_and_arm`` protocol: slice ``s % K`` of the input state is
+verified against the generation that armed it (step ``s-1``'s output
+digest — the same buffer version), and slice ``(s+1) % K`` of the output
+is armed for step ``s+1``'s check.  The trajectory itself is bit-exact to
+the unfused step: the digest subcomputation only *reads* the state on
+either side of the user step, it never feeds back into it.
+"""
+
+from __future__ import annotations
+
+import time
+import weakref
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.detect import ChecksumCanary, FaultReport
+from repro.kernels import digest as kdigest
+
+#: global executable cache — step_fn -> {(plan, K, donate, rotation,
+#: args_sig): (compiled, union, chk)}.  The outer map is WEAKLY keyed on
+#: the step-fn object: callers that build many factories over one
+#: long-lived step function (one per campaign trial — the campaign holds
+#: the function) share entries and never recompile, while callers that
+#: mint a fresh step function per run (launch/train.py, launch/serve.py)
+#: leak nothing — when the run's factory and step function are released,
+#: their K executables evaporate with the weak key.
+_EXEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def clear_executable_cache() -> None:
+    """Drop every cached fused-step executable immediately (the weak
+    keying already reclaims entries whose step function has died)."""
+    _EXEC_CACHE.clear()
+
+
+def _sds(tree):
+    """ShapeDtypeStructs of a pytree — compile without executing."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
+
+
+def _args_signature(args) -> Tuple:
+    flat, treedef = jax.tree_util.tree_flatten(args)
+    return (treedef, tuple((jnp.shape(x), jnp.result_type(x).name)
+                           for x in flat))
+
+
+class FusedStepFactory:
+    """K rotation-specialised executables of (check ∘ step ∘ arm).
+
+    Built by ``ChecksumCanary.fuse_into_step``.  Drive with::
+
+        new_state, aux, report = factory.step(s, state, *args)
+
+    ``step_fn(state, *args) -> (new_state, aux)`` must take and return the
+    canary's plan structure as its first argument/result; ``aux`` (metrics,
+    logits, ...) passes through.  ``report`` is ``None`` on the no-fault
+    path (after the ONE scalar sync) or a ``FaultReport`` with deferred
+    leaf attribution.  On a report the returned ``new_state`` was computed
+    FROM the corrupted input and must be discarded by the caller; with
+    ``donate=True`` the input state has also been consumed — recovery must
+    pivot to snapshot + replay (``RecoveryRuntime(donated=True)``), just
+    as with the arm/check pair.
+
+    Compilation accounting: ``n_compiles``/``compile_seconds`` accumulate
+    the K-executable warmup cost (the benchmarks report it); ``warm()``
+    forces the full rotation eagerly and returns the wall time it took.
+    """
+
+    def __init__(self, step_fn, canary: ChecksumCanary, *,
+                 donate: bool = False, warm: str = "lazy"):
+        if warm not in ("lazy", "eager"):
+            raise ValueError(f"warm must be 'lazy' or 'eager', got {warm!r}")
+        self.step_fn = step_fn
+        self.canary = canary
+        self.plan = canary.plan
+        self.n_slices = canary.n_slices
+        self.donate = donate
+        self.warm_mode = warm
+        self.n_compiles = 0
+        self.compile_seconds = 0.0
+        self._warmed_sigs: set = set()
+        #: the signature of the first-seen step args, memoised so the hot
+        #: path never re-flattens the args pytree (a serve-mode factory
+        #: would otherwise flatten the full params tree every token).
+        #: The factory therefore assumes a STABLE arg structure across
+        #: ``step`` calls — a shape change raises an aval mismatch from
+        #: the compiled executable rather than silently recompiling.
+        self._step_sig = None
+
+    # -- compilation -------------------------------------------------------
+
+    def _build(self, r: int, state_sds, args_sds):
+        """Trace + AOT-compile rotation ``r``'s fused executable."""
+        chk = self.canary._slice_indices(r)
+        arm = self.canary._slice_indices(r + 1)
+        core, union = kdigest.check_arm_subcomputation(self.plan, chk, arm) \
+            if (chk or arm) else (None, ())
+        plan, step_fn = self.plan, self.step_fn
+
+        if core is None:
+            # degenerate rotation (fewer leaves than slices): plain step
+            def fused(state, *args):
+                return step_fn(state, *args)
+            donate_argnums = (0,) if self.donate else ()
+            jfn = jax.jit(fused, donate_argnums=donate_argnums)
+            lowered = jfn.lower(state_sds, *args_sds)
+        else:
+            def fused(state, buf, ref_read, ref_write, *args):
+                in_leaves = plan.leaves(state)
+                new_state, aux = step_fn(state, *args)
+                out_leaves = plan.leaves(new_state)
+                # one digest launch spanning both state versions: the
+                # check slice reads the INPUT buffers (scheduled before
+                # the donated in-place writes), the arm slice reads the
+                # step's output
+                buf, flag, bad, new_write = core(
+                    buf,
+                    [in_leaves[i] for i in chk] +
+                    [out_leaves[i] for i in arm],
+                    ref_read, ref_write)
+                return new_state, aux, buf, flag, bad, new_write
+            donate_argnums = (1, 3) + ((0,) if self.donate else ())
+            jfn = jax.jit(fused, donate_argnums=donate_argnums)
+            table_sds = _sds(self.canary.reference)
+            buf_sds = _sds(self.plan.take_buffer(union))
+            lowered = jfn.lower(state_sds, buf_sds, table_sds, table_sds,
+                                *args_sds)
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        self.compile_seconds += time.perf_counter() - t0
+        self.n_compiles += 1
+        return compiled, union, tuple(chk)
+
+    def _executable(self, r: int, sig, state, args):
+        per_fn = _EXEC_CACHE.get(self.step_fn)
+        if per_fn is None:
+            per_fn = _EXEC_CACHE[self.step_fn] = {}
+        key = (self.plan, self.n_slices, self.donate, r, sig)
+        ent = per_fn.get(key)
+        if ent is None:
+            ent = self._build(r, _sds(state), _sds(args))
+            per_fn[key] = ent
+        return ent
+
+    def warm(self, state, *args) -> float:
+        """Compile all K rotation executables for these arg shapes (no
+        step compute — AOT lower/compile only).  Returns wall seconds;
+        idempotent per arg signature."""
+        return self._warm(_args_signature(args), state, args)
+
+    def _warm(self, sig, state, args) -> float:
+        if sig in self._warmed_sigs:
+            return 0.0
+        t0 = time.perf_counter()
+        for r in range(self.n_slices):
+            self._executable(r, sig, state, args)
+        self._warmed_sigs.add(sig)
+        return time.perf_counter() - t0
+
+    # -- hot path ----------------------------------------------------------
+
+    def step(self, s: int, state, *args):
+        """Run one fused step: returns ``(new_state, aux, report)``.
+
+        ONE launch (the combined step+detection executable) and ONE scalar
+        host sync; the write-generation table commit and generation bump
+        ride the canary's begin/commit plumbing, so interleaving with
+        ``refresh`` (post-recovery) behaves exactly like the pair path.
+        """
+        # the signature is the dispatch key — memoised on first use so
+        # steady-state steps never re-flatten the args pytree
+        sig = self._step_sig
+        if sig is None:
+            sig = self._step_sig = _args_signature(args)
+        if self.warm_mode == "eager":
+            self._warm(sig, state, args)
+        can = self.canary
+        r = s % self.n_slices
+        compiled, union, chk = self._executable(r, sig, state, args)
+        kdigest.STATS.launches += 1
+        if not union:                       # degenerate rotation: no digest
+            new_state, aux = compiled(state, *args)
+            return new_state, aux, None
+        ref_read, ref_write = can.begin_update()
+        new_state, aux, buf, flag, bad, new_write = compiled(
+            state, self.plan.take_buffer(union), ref_read, ref_write, *args)
+        self.plan.put_buffer(union, buf)
+        can.commit_update(new_write)
+        report = None
+        if bool(kdigest.fetch(flag)):       # the step's ONE host sync
+            report = FaultReport(
+                s, "checksum",
+                detail="in-step fused check",
+                resolver=lambda: can._attribute(chk, bad))
+        return new_state, aux, report

@@ -225,6 +225,13 @@ class RecoveryRuntime:
         ``verify(state) -> List[str]`` names still-corrupt leaves (empty =
         verified).  Default: non-finite scan over float leaves.
         """
+        # in-step fused detection defers leaf attribution: the hot path
+        # fetched only the scalar mismatch flag, so the per-leaf bad-mask
+        # vector is still on device — materialise it now (fault path; one
+        # extra transfer) so the Recovery Table lookup and the targeted
+        # rungs see the corrupted leaf paths exactly as with the pair
+        # protocol.
+        report.resolve()
         ladder = list(ladder) if ladder is not None else self._ladder(report)
         verify = verify or _default_verify
         ev = RecoveryEvent(step=step, report=report)

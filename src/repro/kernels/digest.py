@@ -31,10 +31,35 @@ no-fault hot path.  This module replaces that with (DESIGN.md §4.2):
   the same Fletcher digests in numpy uint32 wraparound arithmetic,
   bit-identical to the kernel, so micro-snapshot host DMA copies are
   certified without re-uploading a byte to the device.
+* **digest as traceable subcomputation** — ``DigestPlan.digest_fn`` and
+  ``check_arm_subcomputation`` return PURE functions whose only host-side
+  work (plan lookup, row maps, offsets) happens at build/trace time: the
+  traced path carries no dict lookups, so callers can embed a digest
+  inside their own jitted program.  ``core/fused_step.py`` uses this to
+  run the canary check+arm INSIDE the jitted (donated) training step.
+
+Launch/sync/byte contract per detection mode, for state of ``B`` bytes
+and canary period ``K`` (the DESIGN.md §4.2 cost table in code form):
+
+  ===================  ========  =============  ===========
+  mode                 launches  host syncs     bytes/step
+  ===================  ========  =============  ===========
+  per-leaf (seed)      O(L/K)    O(L/K)         ~2B/K
+  fused check_and_arm  1         1 scalar       ~2B/K
+  donated pair         2         1 scalar       ~2B/K
+  in-step fused        0 extra*  1 scalar       ~2B/K
+  ===================  ========  =============  ===========
+
+  *the in-step fused mode rides the step's own launch: the digest is a
+  subcomputation of the jitted step (``core/fused_step.py``), so the
+  no-fault hot path is 1 combined launch/step total — counted as one
+  ``STATS.launches`` — at the cost of K rotation-specialised step
+  executables.
 
 Instrumentation: ``STATS`` counts launches (one per digest invocation —
 each digest is one in-place pack + one ``row_checksums`` pallas_call,
-counted as a single fused launch), host syncs (every device→host fetch in
+counted as a single fused launch; the in-step fused mode counts its one
+combined step+digest dispatch), host syncs (every device→host fetch in
 this module and in the canary goes through ``fetch``), and traces
 (incremented inside traced bodies, so a plan-cache hit provably does not
 retrace).  The host digest path touches no device and counts nothing.
@@ -356,6 +381,54 @@ def plan_for(tree) -> DigestPlan:
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# check+arm as a traceable subcomputation — the shared core of every fused
+# canary mode (DESIGN.md §4.2).  Building it resolves all host-side plan
+# state (digest-fn lookup, row index arrays, segment maps) ONCE; the
+# returned function is pure and jit-embeddable, so the same subcomputation
+# serves both the standalone fused launches (core/detect.py) and the
+# in-step fused mode that runs it inside the jitted, donated training step
+# (core/fused_step.py).
+# ---------------------------------------------------------------------------
+
+def check_arm_subcomputation(plan: DigestPlan, chk: Sequence[int],
+                             arm: Sequence[int]):
+    """Build the fused check+arm digest core for one canary rotation.
+
+    Returns ``(fn, union)`` where ``union = tuple(chk) + tuple(arm)`` names
+    the packing-buffer subset (``plan.take_buffer(union)``) and
+
+        fn(buf, leaves, ref_read, ref_write)
+            -> (buf, any_mismatch, bad_mask, new_write)
+
+    digests ``leaves`` (the chk-slice leaves followed by the arm-slice
+    leaves, possibly drawn from two state versions) in ONE pallas launch,
+    compares the first ``len(chk)`` digests against rows ``chk`` of
+    ``ref_read`` on device, and scatter-arms the remaining digests into
+    rows ``arm`` of ``ref_write`` (in place when the caller donates it).
+    Pure/traceable: no host-side plan lookups survive into the traced
+    path, so callers may embed ``fn`` inside their own jit — including a
+    jitted step function that donates its state (core/fused_step.py).
+    """
+    chk = tuple(chk)
+    arm = tuple(arm)
+    union = chk + arm
+    digest = plan.digest_fn(union)
+    chk_rows = np.asarray(chk, np.int32)
+    arm_rows = np.asarray(arm, np.int32)
+    nc = len(chk)
+
+    def fn(buf, leaves, ref_read, ref_write):
+        buf, table = digest(buf, leaves)    # ONE fused launch
+        bad = jnp.any(table[:nc] != ref_read[chk_rows], axis=1) \
+            if nc else jnp.zeros((0,), bool)
+        new_write = ref_write.at[arm_rows].set(table[nc:]) \
+            if arm else ref_write
+        return buf, jnp.any(bad), bad, new_write
+
+    return fn, union
 
 
 # ---------------------------------------------------------------------------

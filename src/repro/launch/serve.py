@@ -62,7 +62,8 @@ class ServeReport:
 
 def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
           seed: int = 0, inject_every: int = 0, verbose: bool = True,
-          canary_slices: int = 4, donate: bool = False) -> Dict:
+          canary_slices: int = 4, donate: bool = False,
+          fused_detect: bool = False) -> Dict:
     """Recovery-wrapped batched serving.  Detection: free trap (non-finite
     logits) + a rotating checksum canary over the decode cache —
     bit-flips in a KV cache rarely drive logits non-finite (RMSNorm masks
@@ -73,7 +74,14 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     cache — the production in-place KV-update setting.  The canary then
     runs just before the decode consumes the cache (its last readable
     moment); prefix replay never needs the donated buffer, so recovery is
-    unchanged."""
+    unchanged.
+
+    ``fused_detect=True`` runs the canary INSIDE the jitted decode step
+    (``ChecksumCanary.fuse_into_step``): the check of the input cache's
+    slice ``t % K`` and the arm of the updated cache's next slice ride the
+    decode's own launch — 1 combined launch + 1 scalar sync per token,
+    donated or not, at the cost of K rotation-specialised decode
+    compilations."""
     from repro.core import ChecksumCanary
 
     m = cfg.model
@@ -106,11 +114,27 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     inputs: List[np.ndarray] = [np.asarray(token)]
     canary = ChecksumCanary({"cache": cache}, n_slices=canary_slices) \
         if canary_slices else None
+    fused = None
+    if fused_detect:
+        if canary is None:
+            raise ValueError("fused_detect requires canary_slices > 0")
+
+        def raw_decode(ctree, p, tok):
+            lg, nc = model.decode_step(p, m, ctree["cache"], tok, None)
+            return {"cache": nc}, lg
+
+        # the factory jits decode + canary together; the plain jitted
+        # `decode` above still serves prefix replay on the fault path.
+        # Warm all K rotation executables BEFORE the timed loop so the
+        # first token's decode_ms doesn't absorb the compilations.
+        fused = canary.fuse_into_step(raw_decode, donate=donate,
+                                      warm="eager")
+        fused.warm({"cache": cache}, params, token)
 
     t = 0
     last_inject = -1
     while t < gen_tokens:
-        if donate and canary:
+        if donate and canary and fused is None:
             # donated decode, arm half: digest slice t%K of the cache the
             # previous decode just produced (one launch, no sync); the
             # check below verifies the same slice of the same version
@@ -126,7 +150,7 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
             last_inject = t
 
         report = None
-        if donate and canary:
+        if donate and canary and fused is None:
             # donated decode, check half: the cache's last readable moment
             # is BEFORE the step consumes it — one launch + one scalar
             # sync verifies slice t%K against the arm at the loop top
@@ -134,11 +158,18 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
 
         if report is None:
             t0 = time.perf_counter()
-            logits, new_cache = decode(params, cache, token)
+            if fused is not None:
+                # in-step fused canary: cache check + next-slice arm ride
+                # the decode's own launch (1 launch + 1 scalar sync/token)
+                ctree, logits, report = fused.step(
+                    t, {"cache": cache}, params, token)
+                new_cache = ctree["cache"]
+            else:
+                logits, new_cache = decode(params, cache, token)
             jax.block_until_ready(logits)
             rep.decode_ms.append(1e3 * (time.perf_counter() - t0))
 
-            if canary and not donate:
+            if canary and not donate and fused is None:
                 # fused rotating canary — one launch + one scalar sync per
                 # token: verify slice t%K of the cache the decode just
                 # consumed, arm slice (t+1)%K of the fresh cache
@@ -187,6 +218,9 @@ def main():
     ap.add_argument("--donate", action="store_true",
                     help="donate the decode cache into the step (in-place "
                          "KV update); the canary checks pre-decode")
+    ap.add_argument("--fused-detect", action="store_true",
+                    help="run the cache canary INSIDE the jitted decode "
+                         "(1 combined launch + 1 scalar sync per token)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -194,7 +228,8 @@ def main():
         cfg = cfg.smoke()
     out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
                 gen_tokens=args.gen, seed=args.seed,
-                inject_every=args.inject, donate=args.donate)
+                inject_every=args.inject, donate=args.donate,
+                fused_detect=args.fused_detect)
     print(json.dumps(out, indent=1))
 
 

@@ -11,6 +11,10 @@ Hot path per step (in order, mirroring the paper's §3.5 design):
     4. micro-checkpoint bookkeeping (bytes)           — Algorithm 2
 Everything else (recovery ladder, snapshots restore, disk C/R) is OFF the
 hot path and runs only on a FaultReport.
+
+With ``--fused-detect`` steps 1 and 3 are ONE jitted program: the canary
+check/arm runs inside the step (core/fused_step.py), so the no-fault hot
+path is a single launch + a single scalar sync even under ``--donate``.
 """
 
 from __future__ import annotations
@@ -84,7 +88,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           checkpoint_dir: Optional[str] = None, checkpoint_interval: int = 50,
           inject_every: int = 0, inject_target: str = "params",
           canary_slices: int = 4, detectors: bool = True,
-          donate: bool = False, verbose: bool = True) -> Dict:
+          donate: bool = False, fused_detect: bool = False,
+          fused_warm: str = "eager", verbose: bool = True) -> Dict:
     """Run the recovery-wrapped loop; returns the loop report dict.
 
     ``donate=True`` is the production compilation setting: the step is
@@ -95,6 +100,17 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     and on ANY trap recovery pivots to the in-HBM micro-snapshot + IV
     replay rung — the trap path never touches a donated buffer.  With
     ``donate=False`` the loop is bit-identical to the pre-donation driver.
+
+    ``fused_detect=True`` fuses the canary INTO the jitted step
+    (``ChecksumCanary.fuse_into_step``; DESIGN.md §4.2 "in-step fused"):
+    the input-slice check and the output-slice arm are subcomputations of
+    the step itself, so each step is 1 combined launch + 1 scalar sync —
+    under donation this halves the dispatch count of the arm/check pair —
+    at the cost of ``canary_slices`` rotation-specialised compilations
+    (``fused_warm``: ``'eager'`` compiles all K before the first step,
+    ``'lazy'`` compiles each rotation on first use).  Detection semantics
+    and digests are bit-identical to the unfused paths, which are left
+    untouched when the flag is off.
     """
     key = jax.random.PRNGKey(seed)
     pipe = TokenPipeline(cfg.model.vocab_size, seq_len, global_batch,
@@ -115,6 +131,21 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
         donated=donate)
     canary = ChecksumCanary(state, n_slices=canary_slices) \
         if detectors else None
+    fused = None
+    if fused_detect:
+        if canary is None:
+            raise ValueError("fused_detect requires detectors=True "
+                             "(the canary IS the in-step detector)")
+        # the factory jits the RAW step together with the canary check/arm;
+        # the separately jitted step_fn above still serves replay/recovery
+        fused = canary.fuse_into_step(
+            make_train_step(cfg, global_batch=global_batch),
+            donate=donate, warm=fused_warm)
+        if fused_warm == "eager":
+            # compile all K rotation executables BEFORE the loop so the
+            # first step's wall time doesn't absorb them ('lazy' keeps
+            # the documented pay-per-rotation behaviour)
+            fused.warm(state, bfn(0))
 
     rng = random.Random(seed + 7)
     rep = LoopReport()
@@ -125,7 +156,7 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
 
     s = 0
     while s < steps:
-        if donate and canary is not None:
+        if donate and canary is not None and fused is None:
             # donated hot path, arm half: digest slice s%K of the buffer
             # the previous step just produced (one launch, no sync);
             # check(s) below verifies the SAME slice of the SAME buffer
@@ -146,7 +177,7 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             last_inject = s
 
         report = None
-        if donate and canary is not None:
+        if donate and canary is not None and fused is None:
             # donated hot path, check half: the step is about to CONSUME
             # the state buffers, so this is their last readable moment —
             # one launch + ONE scalar sync verifies slice s%K against the
@@ -155,14 +186,23 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
 
         if report is None:
             t0 = time.perf_counter()
-            new_state, metrics = step_fn(state, bfn(s))
+            if fused is not None:
+                # in-step fused canary: the check of slice s%K of the
+                # input state and the arm of slice (s+1)%K of the output
+                # ride the step's own launch — 1 combined launch + 1
+                # scalar sync, donated or not; on a report the new state
+                # is corrupt-derived and discarded below
+                new_state, metrics, report = fused.step(s, state, bfn(s))
+            else:
+                new_state, metrics = step_fn(state, bfn(s))
             jax.block_until_ready(metrics["loss"])
             rep.step_seconds.append(time.perf_counter() - t0)
 
-            if detectors:
+            if detectors and report is None:
                 report = trap_nonfinite(s, metrics) or \
                     trap_loss_spike(s, metrics, history)
-                if report is None and not donate and canary is not None:
+                if report is None and not donate and canary is not None \
+                        and fused is None:
                     # fused rotating canary — ONE launch + ONE scalar sync:
                     # verify the pre-step state's slice (armed at the end
                     # of an earlier step: was the state rotted while at
@@ -183,6 +223,10 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
 
         # ---------------- recovery path (off hot path) -------------------
         rep.faults_detected += 1
+        # in-step fused reports defer leaf attribution to the fault path —
+        # materialise it here so the log names the corrupted leaves
+        # exactly like the unfused paths (no-op for resolved reports)
+        report.resolve()
         if verbose:
             print(f"[train] FAULT at step {s}: {report}")
         try:
@@ -233,6 +277,14 @@ def main():
                     help="jit the step with donate_argnums=(0,) — the "
                          "production in-place-update setting; recovery "
                          "pivots to snapshot+replay")
+    ap.add_argument("--fused-detect", action="store_true",
+                    help="fuse the canary check/arm INTO the jitted step "
+                         "(1 combined launch + 1 scalar sync per step; "
+                         "K rotation-specialised compilations)")
+    ap.add_argument("--fused-warm", default="eager",
+                    choices=["eager", "lazy"],
+                    help="compile the K fused step executables up front "
+                         "(eager) or on first use of each rotation (lazy)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -245,7 +297,9 @@ def main():
                 checkpoint_dir=args.ckpt_dir,
                 inject_every=args.inject,
                 inject_target=args.inject_target,
-                donate=args.donate)
+                donate=args.donate,
+                fused_detect=args.fused_detect,
+                fused_warm=args.fused_warm)
     print(json.dumps(out, indent=1) if args.json else out)
 
 

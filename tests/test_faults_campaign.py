@@ -70,7 +70,11 @@ CASES = [
      InjectionPlan("final_norm/scale", 3, 30, 2, "params"),
      {"traps":   ("crash", "nonfinite", True, True, RUNG_REPLAY),
       "canary":  ("crash", "nonfinite", True, True, RUNG_REPLAY),
-      "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
+      "donated": ("crash", "checksum", True, True, RUNG_REPLAY),
+      # in-step detection checks the INPUT slice before the traps ever
+      # see the step's (non-finite) loss — detector is the checksum,
+      # exactly as in the donated pre-step check; outcome/rung identical
+      "fused":   ("crash", "checksum", True, True, RUNG_REPLAY)}),
     ("ffn-b30-dormant",
      InjectionPlan("groups/0/0/ffn/up/w", 1000, 30, 3, "params"),
      {"traps":   ("sdc", "", False, False, ""),
@@ -90,7 +94,18 @@ CASES = [
 
 REGIMES = {"traps": dict(use_canary=False, donate=False),
            "canary": dict(use_canary=True, donate=False),
-           "donated": dict(use_canary=True, donate=True)}
+           "donated": dict(use_canary=True, donate=True),
+           # in-step fused detection must CONFORM to the unfused paths:
+           # same outcomes, same detectors, same rungs, same exactness
+           # (fused non-donated ≡ canary regime — incl. the Eq.(1) rung
+           # chosen from the RESOLVED deferred attribution; fused donated
+           # ≡ donated regime's unconditional replay pivot)
+           "fused": dict(use_canary=True, donate=False, fused=True),
+           "fused-donated": dict(use_canary=True, donate=True, fused=True)}
+
+#: which CASES expectation column a regime is asserted against when the
+#: case has no explicit column for it
+EXPECT_AS = {"fused": "canary", "fused-donated": "donated"}
 
 
 @pytest.mark.parametrize("name,plan,expected",
@@ -99,7 +114,7 @@ REGIMES = {"traps": dict(use_canary=False, donate=False),
 def test_outcome_conformance(campaign, name, plan, expected, regime):
     """Classifier + ladder conformance against constructed ground truth."""
     want_outcome, want_detector, want_rec, want_exact, want_rung = \
-        expected[regime]
+        expected.get(regime) or expected[EXPECT_AS.get(regime, regime)]
     trial = campaign.run_trial(random.Random(0), plan=plan,
                                canary_slices=1, **REGIMES[regime])
     assert trial.outcome == want_outcome, (name, regime, trial)

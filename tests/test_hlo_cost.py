@@ -12,6 +12,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 
+from conftest import requires_axis_type
 from repro.launch import hlo_cost as HC
 
 
@@ -78,6 +79,7 @@ SUBPROCESS_PROG = textwrap.dedent("""
 """)
 
 
+@requires_axis_type
 def test_spmd_per_device_flops_and_collectives():
     out = subprocess.run([sys.executable, "-c", SUBPROCESS_PROG],
                          capture_output=True, text=True, cwd="/root/repo",

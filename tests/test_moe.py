@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from conftest import requires_axis_type
 from repro.configs.base import ModelConfig
 from repro.models import moe as M
 
@@ -103,6 +104,7 @@ EP_PROG = textwrap.dedent("""
 """)
 
 
+@requires_axis_type
 def test_ep_paths_match_local():
     """Both EP schedules (mask+psum baseline and token-routed a2a, §Perf B4)
     must agree with the single-device oracle."""

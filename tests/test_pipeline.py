@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import requires_axis_type
+
 PIPE_PROG = textwrap.dedent("""
     import os, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -41,6 +43,7 @@ PIPE_PROG = textwrap.dedent("""
 """)
 
 
+@requires_axis_type
 def test_gpipe_matches_sequential():
     out = subprocess.run([sys.executable, "-c", PIPE_PROG],
                          capture_output=True, text=True, cwd="/root/repo",
