@@ -31,6 +31,16 @@ Modes:
   'care'    — the SC'19 baseline: no induction-variable recovery; a trial
               whose IV block is corrupted cannot replay (the RSI's loop
               state is gone) and counts unrecovered.
+
+Mesh regime (``Campaign(ctx=DistContext)``; DESIGN.md §5): the whole
+campaign — ground-truth trajectory, injection, detection, recovery and
+the horizon continuation — runs on the device mesh.  The ground truth is
+recomputed ON the mesh because reduction reordering under GSPMD is not
+bit-identical to single-device execution; outcome CLASSIFICATION is what
+must conform across regimes (asserted by tests/test_sharded_resilience.py).
+The canary goes shard-local, snapshots carry per-(leaf, shard) digests,
+and non-donated recoveries may use the shard_patch rung (restore only the
+injured shard) when a version-matched snapshot exists.
 """
 
 from __future__ import annotations
@@ -85,21 +95,39 @@ class Trial:
 class Campaign:
     def __init__(self, cfg_name: str = "iterpro-100m", B: int = 2,
                  S: int = 32, total_steps: int = 10,
-                 snapshot_interval: int = 2, seed: int = 0):
+                 snapshot_interval: int = 2, seed: int = 0, ctx=None):
         self.B, self.S = B, S
         self.total_steps = total_steps
         self.snapshot_interval = snapshot_interval
         self.seed = seed
+        self.ctx = ctx if (ctx is not None and ctx.enabled) else None
         self.cfg = get_config(cfg_name).smoke()
         self.pipe = TokenPipeline(self.cfg.model.vocab_size, S, B, seed=seed)
-        self.bfn = lambda s: self.pipe.batch_at(s)
-        self.step = jax.jit(make_train_step(self.cfg, global_batch=B))
+        self.shardings = None
         self._donated_step = None    # built lazily: donate_argnums=(0,)
         self._raw_step = None        # built lazily: unjitted (fused detect)
 
-        # fault-free reference trajectory (ground truth for benign/SDC/exact)
         state = make_train_state(self.cfg, jax.random.PRNGKey(seed),
                                  global_batch=B)
+        if self.ctx is not None:
+            # mesh regime: shard the state, pin its layout through the
+            # step, shard batches — the ground truth below then IS the
+            # mesh trajectory (GSPMD reduction order is not bit-identical
+            # to single-device, so truth must be computed where trials run)
+            from repro.launch.specs import batch_shardings, state_shardings
+            from repro.train.loop import pin_state_shardings
+            self.shardings, _ = state_shardings(self.ctx, self.cfg, state)
+            state = jax.device_put(state, self.shardings)
+            self._pin = lambda fn: pin_state_shardings(fn, self.shardings)
+            bsh, _ = batch_shardings(self.ctx, self.pipe.batch_at(0))
+            self.bfn = lambda s: jax.device_put(self.pipe.batch_at(s), bsh)
+        else:
+            self._pin = lambda fn: fn
+            self.bfn = lambda s: self.pipe.batch_at(s)
+        self.step = jax.jit(self._pin(
+            make_train_step(self.cfg, global_batch=B)))
+
+        # fault-free reference trajectory (ground truth for benign/SDC/exact)
         self.states = [state]
         self.losses = []
         for s in range(total_steps):
@@ -125,7 +153,7 @@ class Campaign:
         updates the state in place; the pre-step buffers die)."""
         if self._donated_step is None:
             self._donated_step = jax.jit(
-                make_train_step(self.cfg, global_batch=self.B),
+                self._pin(make_train_step(self.cfg, global_batch=self.B)),
                 donate_argnums=(0,))
         return self._donated_step
 
@@ -133,9 +161,12 @@ class Campaign:
         """The UNJITTED step function, for in-step fused detection: the
         ``FusedStepFactory`` jits it together with the canary check/arm.
         One function object for the campaign's lifetime, so the factory's
-        global executable cache never recompiles across trials."""
+        global executable cache never recompiles across trials.  In the
+        mesh regime the output layout is pinned to the canonical
+        shardings, exactly like the jitted steps."""
         if self._raw_step is None:
-            self._raw_step = make_train_step(self.cfg, global_batch=self.B)
+            self._raw_step = self._pin(
+                make_train_step(self.cfg, global_batch=self.B))
         return self._raw_step
 
     # ------------------------------------------------------------------
@@ -181,7 +212,8 @@ class Campaign:
 
         # live-schedule snapshots: clean prefix up to t0, then the faulty
         # run snapshots its own (possibly corrupted) lineage — realism.
-        micro = MicroCheckpointer(interval=self.snapshot_interval, keep=2)
+        micro = MicroCheckpointer(interval=self.snapshot_interval, keep=2,
+                                  ctx=self.ctx)
         for s in range(0, t0 + 1):
             micro.maybe_snapshot(s, self.states[s])
             micro.record_iv(s, self.states[s]["iv"])
@@ -190,7 +222,8 @@ class Campaign:
         state = inject(self.states[t0], plan)
         if donate:
             state = self.clone(state)
-        canary = ChecksumCanary(self.states[t0], n_slices=canary_slices) \
+        canary = ChecksumCanary(self.states[t0], n_slices=canary_slices,
+                                ctx=self.ctx) \
             if use_canary else None
         factory = canary.fuse_into_step(self.raw_step(), donate=donate) \
             if fused else None
@@ -266,7 +299,7 @@ class Campaign:
                                   iv_registry=promote(self.cfg, self.B),
                                   micro=micro,
                                   checkpoint=lambda: (self.states[0], 0),
-                                  donated=donate)
+                                  donated=donate, shardings=self.shardings)
         ladder = None
         if mode == "care":
             # CARE cannot repair loop state: if any IV is corrupted the RSI

@@ -42,6 +42,11 @@ def main():
                     help="run the canary INSIDE the jitted step — 1 "
                          "combined launch + 1 scalar sync per step "
                          "(DESIGN.md §4.2 in-step fused)")
+    ap.add_argument("--mesh", default=None,
+                    help="shard the whole resilient loop over a device "
+                         "mesh, e.g. '4,2' (CPU repro: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8; "
+                         "DESIGN.md §5)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,6 +64,7 @@ def main():
                 canary_slices=4,
                 donate=args.donate,
                 fused_detect=args.fused_detect,
+                mesh=args.mesh,
                 verbose=True)
 
     print("\n=== run report ===")

@@ -27,6 +27,13 @@ mode; full table in DESIGN.md §4.2):
     scalar sync per step, at the cost of K rotation-specialised step
     executables.  Leaf attribution is deferred to the fault path via
     ``FaultReport.resolve``.
+
+On a device mesh (``ChecksumCanary(..., ctx=DistContext)``; DESIGN.md §5)
+every mode keeps its contract: digests become shard-local (each device
+streams only its addressable rows), the reference tables are sharded with
+the state, and the one fetched scalar is the all-reduced any(fault) flag
+— the only cross-device hop on the no-fault path.  Attribution resolves
+to (leaf, shard) pairs so recovery can restore a single injured shard.
 """
 
 from __future__ import annotations
@@ -54,18 +61,28 @@ class FaultReport:
     detector: str               # 'nonfinite' | 'loss_spike' | 'checksum' | 'external'
     leaves: List[str] = field(default_factory=list)  # suspected leaf paths
     detail: str = ""
+    #: mesh attribution (sharded canary): leaf path -> injured shard ids
+    #: (mesh-flat device order).  Empty off-mesh or when only free traps
+    #: fired; the shard_patch recovery rung consumes it to restore only
+    #: the injured shards' addressable state.
+    shards: Dict[str, List[int]] = field(default_factory=dict)
     #: deferred leaf attribution (in-step fused detection): the hot path
-    #: fetches only the scalar mismatch flag; the per-leaf bad-mask vector
-    #: stays on device until the fault path calls ``resolve`` (one extra
-    #: transfer, fault path only).
-    resolver: Optional[Callable[[], List[str]]] = \
+    #: fetches only the scalar mismatch flag; the per-(leaf[, shard])
+    #: bad-mask stays on device until the fault path calls ``resolve``
+    #: (one extra transfer, fault path only).
+    resolver: Optional[Callable] = \
         field(default=None, repr=False, compare=False)
 
     def resolve(self) -> List[str]:
-        """Materialise ``leaves`` from a deferred attribution (no-op when
-        attribution already happened at detection time)."""
+        """Materialise ``leaves`` (and ``shards``, on a mesh) from a
+        deferred attribution (no-op when attribution already happened at
+        detection time)."""
         if self.resolver is not None:
-            self.leaves = self.resolver()
+            res = self.resolver()
+            if isinstance(res, tuple):
+                self.leaves, self.shards = res
+            else:
+                self.leaves = res
             self.resolver = None
         return self.leaves
 
@@ -149,11 +166,28 @@ class ChecksumCanary:
     ``check``/``arm`` remain as standalone entry points for callers that
     hold only one state version at a time; each is itself a single fused
     launch (``arm`` syncs nothing).
+
+    Mesh sharding (``ctx=DistContext`` with a live mesh; DESIGN.md §5):
+    the canary becomes shard-local with NO change to the per-step
+    contract.  The plan switches to a ``ShardedDigestPlan`` (every device
+    digests only its addressable shard rows under shard_map), both
+    generation tables grow a leading shard dim — (n_shards, L, 2),
+    sharded over the mesh so each device compares and arms only its own
+    rows — and the one fetched scalar becomes the all-reduced any(fault)
+    flag, the only cross-device communication on the no-fault path.
+    Every protocol above (fused ``check_and_arm``, donated pair, in-step
+    fused) composes unchanged; fault-path attribution resolves to
+    (leaf, shard) pairs (``FaultReport.shards``), which is what lets the
+    recovery runtime restore only the injured shard's addressable state.
+    The protected state must be ``device_put`` with its partition specs
+    before the canary is built (``launch/specs.state_shardings``).
     """
 
-    def __init__(self, tree, n_slices: int = 4):
+    def __init__(self, tree, n_slices: int = 4, ctx=None):
         self.n_slices = max(1, n_slices)
-        self.plan = kdigest.plan_for(tree)
+        self.ctx = ctx if (ctx is not None and ctx.enabled) else None
+        self.plan = kdigest.sharded_plan_for(tree, self.ctx.mesh) \
+            if self.ctx else kdigest.plan_for(tree)
         self._keys: Tuple[str, ...] = self.plan.keys
         table = self.plan.digest_table(tree)
         #: generation-alternating reference tables; row i of either ==
@@ -223,15 +257,24 @@ class ChecksumCanary:
         leaves = self.plan.leaves(tree)
         return [leaves[i] for i in indices]
 
-    def _attribute(self, chk: Sequence[int], bad_mask) -> List[str]:
-        """Fault path only: fetch the per-leaf mismatch vector (the one
-        extra transfer) and name the corrupted leaf paths."""
-        mask = kdigest.fetch(bad_mask)
-        return sorted(self._keys[i] for i, b in zip(chk, mask) if b)
+    def _attribute(self, chk: Sequence[int], bad_mask
+                   ) -> Tuple[List[str], Dict[str, List[int]]]:
+        """Fault path only: fetch the mismatch mask (the one extra
+        transfer) and name the corrupted leaf paths.  Off-mesh the mask is
+        (len(chk),) and the shard map is empty; on a mesh it is
+        (n_shards, len(chk)) and every corrupted leaf also names its
+        injured shard ids (mesh-flat device order)."""
+        mask = np.atleast_1d(kdigest.fetch(bad_mask))
+        if mask.ndim == 2:       # sharded: per-(shard, leaf) mismatch
+            shards = {self._keys[i]: [int(d) for d in
+                                      np.nonzero(mask[:, j])[0]]
+                      for j, i in enumerate(chk) if mask[:, j].any()}
+            return sorted(shards), shards
+        return sorted(self._keys[i] for i, b in zip(chk, mask) if b), {}
 
     def _report(self, step: int, chk: Sequence[int], bad_mask) -> FaultReport:
-        return FaultReport(step, "checksum",
-                           leaves=self._attribute(chk, bad_mask))
+        leaves, shards = self._attribute(chk, bad_mask)
+        return FaultReport(step, "checksum", leaves=leaves, shards=shards)
 
     # -- generation-table plumbing ----------------------------------------
     #
@@ -319,7 +362,9 @@ class ChecksumCanary:
         """Verify every leaf against the read generation (one launch; only
         meaningful right after init/refresh, off the rotating schedule)."""
         table = self.plan.digest_table(tree)
-        bad = jnp.any(table != self.reference, axis=1)
+        # last axis = the 2 Fletcher terms; a leading shard dim (sharded
+        # canary) survives into the mask for (leaf, shard) attribution
+        bad = jnp.any(table != self.reference, axis=-1)
         if bool(kdigest.fetch(jnp.any(bad))):
             return self._report(step, range(len(self._keys)), bad)
         return None
@@ -383,7 +428,18 @@ class ChecksumCanary:
         donation: without it the first post-restore ``check_and_arm``
         would verify the restored state against the stale pre-restore
         generation and fire a spurious checksum fault (regression-tested
-        in tests/test_digest.py)."""
+        in tests/test_digest.py).
+
+        A PARTIAL refresh (explicit ``keys=``) must do the opposite: the
+        generation is NOT bumped.  A bump here would swap the read/write
+        roles of the double-buffered pair mid-rotation, so every slice
+        NOT in ``keys`` would next be verified against the table its rows
+        were armed into two generations ago — a different state version —
+        and fire a spurious fault under donation.  Instead the named
+        leaves' rows are patched IN BOTH generations (the repair certifies
+        regardless of which table serves the next check) and every
+        unrelated row — and the generation counter — is left untouched
+        (regression-tested in tests/test_digest.py)."""
         if keys is None:
             table = self.plan.digest_table(tree)
             self._gen += 1
@@ -395,12 +451,14 @@ class ChecksumCanary:
         rows = np.asarray(idx, np.int32)
         sub = self.plan.digest_subset(tree, idx)
         # targeted repair: patch the named rows in BOTH generations so the
-        # repair certifies regardless of which table serves the next check
+        # repair certifies regardless of which table serves the next check.
+        # (...) keeps the leading shard dim of a sharded canary's tables:
+        # row i of every shard is the leaf's per-shard digest.
         for b in (0, 1):
-            self._tables[b] = self._tables[b].at[rows].set(sub)
+            self._tables[b] = self._tables[b].at[..., rows, :].set(sub)
 
     def reference_digests(self) -> Dict[str, np.ndarray]:
         """Host copy of the surviving reference table (debug/telemetry;
-        one sync)."""
+        one sync).  Sharded canaries yield (n_shards, 2) per leaf."""
         table = kdigest.fetch(self.reference)
-        return {k: table[i] for i, k in enumerate(self._keys)}
+        return {k: table[..., i, :] for i, k in enumerate(self._keys)}

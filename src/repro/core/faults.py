@@ -127,7 +127,14 @@ def _inject_tree(tree, plan: InjectionPlan):
     def visit(path, leaf):
         if leaf_key(path) == plan.leaf and not hit["done"]:
             hit["done"] = True
-            return flip_bit(leaf, plan.element, plan.bit)
+            flipped = flip_bit(leaf, plan.element, plan.bit)
+            # mesh state: the flip's bitcast/reshape chain must not change
+            # the leaf's layout — an adversary corrupts bytes in place, it
+            # does not reshard the victim
+            sharding = getattr(leaf, "sharding", None)
+            if isinstance(sharding, jax.sharding.NamedSharding):
+                flipped = jax.device_put(flipped, sharding)
+            return flipped
         return leaf
 
     out = jax.tree_util.tree_map_with_path(visit, tree)

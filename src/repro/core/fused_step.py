@@ -76,16 +76,33 @@ def clear_executable_cache() -> None:
 
 
 def _sds(tree):
-    """ShapeDtypeStructs of a pytree — compile without executing."""
-    return jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
-        tree)
+    """ShapeDtypeStructs of a pytree — compile without executing.
+
+    NamedShardings ride along: a mesh-sharded state (DESIGN.md §5) must
+    AOT-compile against its real layout, or the executable would insert
+    reshards around the shard_map'd canary subcomputation."""
+    from jax.sharding import NamedSharding
+
+    def sds(x):
+        sharding = getattr(x, "sharding", None)
+        if isinstance(sharding, NamedSharding):
+            return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x),
+                                        sharding=sharding)
+        return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+    return jax.tree_util.tree_map(sds, tree)
 
 
 def _args_signature(args) -> Tuple:
+    from jax.sharding import NamedSharding
+
+    def sig(x):
+        sh = getattr(x, "sharding", None)
+        spec = str(sh.spec) if isinstance(sh, NamedSharding) else None
+        return (jnp.shape(x), jnp.result_type(x).name, spec)
+
     flat, treedef = jax.tree_util.tree_flatten(args)
-    return (treedef, tuple((jnp.shape(x), jnp.result_type(x).name)
-                           for x in flat))
+    return (treedef, tuple(sig(x) for x in flat))
 
 
 class FusedStepFactory:
@@ -135,16 +152,33 @@ class FusedStepFactory:
 
     def _build(self, r: int, state_sds, args_sds):
         """Trace + AOT-compile rotation ``r``'s fused executable."""
+        from jax.sharding import NamedSharding
+
         chk = self.canary._slice_indices(r)
         arm = self.canary._slice_indices(r + 1)
         core, union = kdigest.check_arm_subcomputation(self.plan, chk, arm) \
             if (chk or arm) else (None, ())
         plan, step_fn = self.plan, self.step_fn
 
+        def pin_layout(new_state):
+            # mesh loops: constrain the OUTPUT state to the input layout.
+            # GSPMD would otherwise pick different shardings for some
+            # leaves, which (a) breaks the steady state of an AOT
+            # executable (step s+1's input no longer matches the compiled
+            # sharding) and (b) defeats donation, which can only reuse a
+            # donated buffer into an identically-laid-out output.
+            def c(x, s):
+                sh = getattr(s, "sharding", None)
+                if isinstance(sh, NamedSharding):
+                    return jax.lax.with_sharding_constraint(x, sh)
+                return x
+            return jax.tree_util.tree_map(c, new_state, state_sds)
+
         if core is None:
             # degenerate rotation (fewer leaves than slices): plain step
             def fused(state, *args):
-                return step_fn(state, *args)
+                new_state, aux = step_fn(state, *args)
+                return pin_layout(new_state), aux
             donate_argnums = (0,) if self.donate else ()
             jfn = jax.jit(fused, donate_argnums=donate_argnums)
             lowered = jfn.lower(state_sds, *args_sds)
@@ -152,6 +186,7 @@ class FusedStepFactory:
             def fused(state, buf, ref_read, ref_write, *args):
                 in_leaves = plan.leaves(state)
                 new_state, aux = step_fn(state, *args)
+                new_state = pin_layout(new_state)
                 out_leaves = plan.leaves(new_state)
                 # one digest launch spanning both state versions: the
                 # check slice reads the INPUT buffers (scheduled before

@@ -50,14 +50,32 @@ class Snapshot:
     digests: Dict[str, np.ndarray]
     nbytes: int = 0                  # cached at snapshot time
     wall: float = field(default_factory=time.time)
+    #: mesh metadata (sharded loops; DESIGN.md §5): per leaf, the global
+    #: index tuple each shard id addresses (mesh-flat device order) and
+    #: the per-shard host digests of exactly those bytes.  This is what
+    #: lets the shard_patch recovery rung carve a SINGLE injured shard's
+    #: bytes out of the host copy, certify them, and restore only that
+    #: shard's addressable state.
+    shard_slices: Optional[Dict[str, List]] = None
+    shard_digests: Optional[Dict[str, np.ndarray]] = None
 
 
 class MicroCheckpointer:
-    """Double-buffered in-memory snapshots + per-step IV micro-checkpoints."""
+    """Double-buffered in-memory snapshots + per-step IV micro-checkpoints.
 
-    def __init__(self, interval: int = 8, keep: int = 2):
+    ``ctx`` (a ``DistContext`` with a live mesh) switches snapshots to
+    shard-aware mode: alongside the per-leaf digests, every snapshot
+    records each leaf's shard→index map and per-shard host digests
+    (``Snapshot.shard_slices``/``shard_digests``), so recovery can verify
+    and restore individual (leaf, shard) units instead of whole states.
+    The host copy itself is unchanged (one DMA read of the live state);
+    the shard digests are a second host-side hashing pass over the same
+    bytes, off the hot path."""
+
+    def __init__(self, interval: int = 8, keep: int = 2, ctx=None):
         self.interval = max(1, interval)
         self.keep = max(1, keep)
+        self.ctx = ctx if (ctx is not None and ctx.enabled) else None
         self.snapshots: List[Snapshot] = []
         self.iv_log: Dict[int, Dict[str, int]] = {}
 
@@ -87,10 +105,36 @@ class MicroCheckpointer:
         # loops the snapshot never competes with the step for the donated
         # buffers.
         host = _host_copy(state)
+        shard_slices = shard_digests = None
+        if self.ctx is not None:
+            # shard-aware metadata: index maps from the LIVE shardings,
+            # digests from the host copy's bytes (never re-read the
+            # device) — per (leaf, shard), in mesh-flat shard order
+            shard_slices, shard_digests = {}, {}
+            flat_live = jax.tree_util.tree_flatten_with_path(state)[0]
+            flat_host = jax.tree_util.tree_leaves(host)
+            for (path, live), hleaf in zip(flat_live, flat_host):
+                key = kdigest.leaf_key(path)
+                idxs = kdigest.shard_indices(live)
+                shard_slices[key] = idxs
+                # hash each DISTINCT slice once: a replicated leaf maps
+                # every shard to the same full-leaf index, and hashing it
+                # D times would make snapshots O(replicated_bytes x D)
+                seen: Dict[Tuple, np.ndarray] = {}
+                rows = []
+                for idx in idxs:
+                    k = tuple((s.start, s.stop, s.step)
+                              if isinstance(s, slice) else s for s in idx)
+                    if k not in seen:
+                        seen[k] = kdigest.host_checksum(hleaf[idx])
+                    rows.append(seen[k])
+                shard_digests[key] = np.stack(rows)
         snap = Snapshot(step=step, state=host,
                         digests=kdigest.host_tree_checksums(host),
                         nbytes=sum(leaf.nbytes for leaf in
-                                   jax.tree_util.tree_leaves(host)))
+                                   jax.tree_util.tree_leaves(host)),
+                        shard_slices=shard_slices,
+                        shard_digests=shard_digests)
         self.snapshots.append(snap)
         if len(self.snapshots) > self.keep:
             self.snapshots.pop(0)
@@ -106,6 +150,31 @@ class MicroCheckpointer:
         Entirely host-side — the stored bytes are hashed where they live,
         with no device upload."""
         return kdigest.host_verify_tree(snap.state, snap.digests)
+
+    def verify_shards(self, snap: Snapshot,
+                      shards: Dict[str, List[int]]) -> List[str]:
+        """Digest-verify only the named (leaf, shard) units of a snapshot
+        — the shard_patch rung's exact-or-abort gate.  Hashes ONLY the
+        bytes that would be restored; returns ``"leaf@shard"`` names that
+        fail (empty = all certified).  Host-side, no device work."""
+        if snap.shard_slices is None or snap.shard_digests is None:
+            return sorted(f"{k}@{d}" for k, ds in shards.items() for d in ds)
+        host = {kdigest.leaf_key(p): leaf for p, leaf in
+                jax.tree_util.tree_flatten_with_path(snap.state)[0]}
+        bad = []
+        for key, ids in shards.items():
+            idxs = snap.shard_slices.get(key)
+            ref = snap.shard_digests.get(key)
+            leaf = host.get(key)
+            for d in ids:
+                if idxs is None or ref is None or leaf is None \
+                        or d >= len(idxs):
+                    bad.append(f"{key}@{d}")
+                    continue
+                cur = kdigest.host_checksum(leaf[idxs[d]])
+                if not np.array_equal(cur, ref[d]):
+                    bad.append(f"{key}@{d}")
+        return sorted(bad)
 
     @property
     def memory_bytes(self) -> int:

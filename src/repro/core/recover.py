@@ -10,10 +10,13 @@ This runtime wraps a training loop the same way: it does *nothing* until a
 a device loss), then walks the leaf's recovery ladder:
 
     rung 1  eq1           IV partner recovery (Eq. (1), ns)
-    rung 2  replica_vote  bitwise TMR vote across DP replicas
-    rung 3  parity_xor    XOR parity shard reconstruction
-    rung 4  replay        pure-step replay from a verified micro-snapshot
-    rung 5  checkpoint    classic disk restore (the paper's strawman)
+    rung 2  shard_patch   restore ONLY the injured shard's addressable
+                          bytes from a version-matched, digest-certified
+                          micro-snapshot (mesh loops; DESIGN.md §5)
+    rung 3  replica_vote  bitwise TMR vote across DP replicas
+    rung 4  parity_xor    XOR parity shard reconstruction
+    rung 5  replay        pure-step replay from a verified micro-snapshot
+    rung 6  checkpoint    classic disk restore (the paper's strawman)
 
 Every rung's repair is digest-verified before the loop resumes; a rung that
 cannot certify an exact repair escalates (the abort-instead-of-SDC rule,
@@ -41,6 +44,7 @@ from repro.core.recovery_table import (
     RUNG_PARITY,
     RUNG_REPLAY,
     RUNG_REPLICA,
+    RUNG_SHARD,
     RecoveryTable,
 )
 from repro.core.replay import device_put_like, replay
@@ -57,6 +61,7 @@ class RecoveryEvent:
     attempted: List[str] = field(default_factory=list)
     wall_seconds: float = 0.0
     steps_replayed: int = 0
+    bytes_moved: int = 0           # host→device bytes (shard_patch rung)
     recovered: bool = False
     phase_seconds: Dict[str, float] = field(default_factory=dict)
 
@@ -84,6 +89,10 @@ class RecoveryRuntime:
                   unconditionally to the in-HBM micro-snapshot + IV
                   replay rung (then classic checkpoint), and replay does
                   not consult the dead state for sharding
+    shardings   : pytree of NamedShardings for the train state (mesh
+                  loops) — places replayed snapshots back on the mesh
+                  when donation left no live reference, each device
+                  receiving only its addressable slice
     """
 
     def __init__(self, *, step_fn, batch_fn, iv_registry: IVRegistry,
@@ -92,7 +101,8 @@ class RecoveryRuntime:
                  replicas: Optional[Callable] = None,
                  checkpoint: Optional[Callable] = None,
                  table: Optional[RecoveryTable] = None,
-                 donated: bool = False):
+                 donated: bool = False,
+                 shardings=None):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.ivs = iv_registry
@@ -102,6 +112,7 @@ class RecoveryRuntime:
         self.checkpoint = checkpoint
         self.table = table
         self.donated = donated
+        self.shardings = shardings
         self.events: List[RecoveryEvent] = []
 
     # ------------------------------------------------------------------
@@ -181,6 +192,78 @@ class RecoveryRuntime:
                     return int(idx[0])
         return None
 
+    def _rung_shard_patch(self, state, report: FaultReport, step: int):
+        """Restore ONLY the injured shards' addressable bytes (mesh loops).
+
+        Applicability gates (abort → escalate, never guess):
+          * the report must carry (leaf, shard) attribution — only the
+            sharded canary produces it;
+          * the loop must not have donated the state (the live healthy
+            shards are the other half of the patch);
+          * the newest snapshot must be VERSION-MATCHED (``snap.step ==
+            step``): the canary certifies the live buffer against the
+            digests of the same state version, so only a same-version
+            snapshot can supply bit-exact replacement bytes — an older
+            one would silently mix state versions (the SDC the paper's
+            exact-or-abort rule exists to prevent);
+          * the injured (leaf, shard) units must digest-certify in the
+            snapshot (``MicroCheckpointer.verify_shards``).
+
+        The patch rebuilds each corrupt leaf with
+        ``jax.make_array_from_single_device_arrays``: healthy devices
+        keep their existing shard buffers (zero copies), only the injured
+        shards' bytes cross host→device.  Byte movement is reported — the
+        point of the rung is that it is ~state_bytes/n_shards, not
+        state_bytes."""
+        shards = dict(getattr(report, "shards", None) or {})
+        if not shards:
+            raise RecoveryAbort("no (leaf, shard) attribution")
+        if self.donated:
+            raise RecoveryAbort("donated buffers are dead — replay instead")
+        if all(k.startswith("iv/") for k in shards):
+            raise RecoveryAbort("IV block repairs via Eq.(1)")
+        snap = self.micro.latest(before=step)
+        if snap is None:
+            raise RecoveryAbort("no snapshot available")
+        if snap.step != step:
+            raise RecoveryAbort(
+                f"no version-matched snapshot (have step {snap.step}, "
+                f"fault is against version {step})")
+        rotten = self.micro.verify_shards(snap, shards)
+        if rotten:
+            raise RecoveryAbort(f"snapshot shards failed verification: "
+                                f"{rotten[:3]}")
+        host = {kops.leaf_key(p): leaf for p, leaf in
+                jax.tree_util.tree_flatten_with_path(snap.state)[0]}
+        moved = [0, 0]                      # bytes, shard units
+
+        def heal(path, leaf):
+            key = kops.leaf_key(path)
+            ids = set(shards.get(key) or ())
+            if not ids:
+                return leaf
+            sharding = leaf.sharding
+            devs = kdigest.mesh_device_order(sharding.mesh)
+            idxs = snap.shard_slices[key]
+            by_dev = {sh.device: sh.data for sh in leaf.addressable_shards}
+            bufs = []
+            for d, dev in enumerate(devs):
+                if d in ids:
+                    piece = np.ascontiguousarray(host[key][idxs[d]])
+                    bufs.append(jax.device_put(piece, dev))
+                    moved[0] += piece.nbytes
+                    moved[1] += 1
+                else:
+                    bufs.append(by_dev[dev])
+            return jax.make_array_from_single_device_arrays(
+                leaf.shape, sharding, bufs)
+
+        out = jax.tree_util.tree_map_with_path(heal, state)
+        self._last_patched_bytes = moved[0]
+        return out, (f"patched {moved[1]} shard(s) of {len(shards)} "
+                     f"leaf/leaves ({moved[0]} B moved) from snapshot "
+                     f"@{snap.step}")
+
     def _rung_replay(self, state, report: FaultReport, step: int):
         """Replay from the newest digest-verified snapshot ≤ step."""
         snap = self.micro.latest(before=step)
@@ -191,7 +274,8 @@ class RecoveryRuntime:
             raise RecoveryAbort(f"snapshot failed verification: {rotten[:3]}")
         res = replay(self.step_fn, self.batch_fn, snap.state,
                      snap.step, step,
-                     like_state=None if self.donated else state)
+                     like_state=None if self.donated else state,
+                     shardings=self.shardings)
         self._last_replayed = res.steps_replayed
         return res.state, f"replayed {res.steps_replayed} steps from {snap.step}"
 
@@ -201,12 +285,14 @@ class RecoveryRuntime:
             raise RecoveryAbort("no checkpoint loader configured")
         ck_state, ck_step = self.checkpoint()
         res = replay(self.step_fn, self.batch_fn, ck_state, ck_step, step,
-                     like_state=None if self.donated else state)
+                     like_state=None if self.donated else state,
+                     shardings=self.shardings)
         self._last_replayed = res.steps_replayed
         return res.state, f"restored step {ck_step} + replayed to {step}"
 
     _RUNGS = {
         RUNG_EQ1: _rung_eq1,
+        RUNG_SHARD: _rung_shard_patch,
         RUNG_REPLICA: _rung_replica,
         RUNG_PARITY: _rung_parity,
         RUNG_REPLAY: _rung_replay,
@@ -242,6 +328,7 @@ class RecoveryRuntime:
                 continue
             ev.attempted.append(rung)
             self._last_replayed = 0
+            self._last_patched_bytes = 0
             tr = time.perf_counter()
             try:
                 cand, detail = fn(self, state, report, step)
@@ -258,6 +345,7 @@ class RecoveryRuntime:
             ev.rung = rung
             ev.recovered = True
             ev.steps_replayed = self._last_replayed
+            ev.bytes_moved = self._last_patched_bytes
             ev.wall_seconds = time.perf_counter() - t0
             ev.report.detail += f" | {rung}: {detail}"
             self.events.append(ev)
@@ -270,8 +358,9 @@ class RecoveryRuntime:
         """Choose the ladder from the Recovery Table (or the default)."""
         if self.donated:
             # the pre-step state was donated into the step — there are no
-            # live buffers for the in-place rungs (Eq.(1), TMR, parity) to
-            # read or repair: pivot straight to snapshot + IV replay
+            # live buffers for the in-place rungs (Eq.(1), TMR, parity,
+            # shard patch) to read or repair: pivot straight to snapshot +
+            # IV replay
             return [RUNG_REPLAY, RUNG_CHECKPOINT]
         if self.table is not None and report.leaves:
             entry = self.table.lookup(report.leaves[0])
@@ -279,8 +368,14 @@ class RecoveryRuntime:
                 return list(entry.ladder)
         if report.leaves and all(k.startswith("iv/") for k in report.leaves):
             return [RUNG_EQ1, RUNG_REPLAY, RUNG_CHECKPOINT]
-        return [RUNG_EQ1, RUNG_REPLICA, RUNG_PARITY, RUNG_REPLAY,
-                RUNG_CHECKPOINT]
+        ladder = [RUNG_EQ1, RUNG_REPLICA, RUNG_PARITY, RUNG_REPLAY,
+                  RUNG_CHECKPOINT]
+        if getattr(report, "shards", None):
+            # mesh attribution: try the byte-minimal shard patch first —
+            # its gates (version match, shard certification) abort cleanly
+            # into the generic ladder when it does not apply
+            ladder.insert(0, RUNG_SHARD)
+        return ladder
 
     # -- telemetry -------------------------------------------------------
 

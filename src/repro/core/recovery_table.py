@@ -23,6 +23,7 @@ from repro.kernels.ops import leaf_key
 
 
 RUNG_EQ1 = "eq1"                 # induction-variable partner recovery
+RUNG_SHARD = "shard_patch"       # restore only the injured shard's bytes
 RUNG_REPLICA = "replica_vote"    # TMR vote across DP replicas
 RUNG_PARITY = "parity_xor"       # XOR parity reconstruction
 RUNG_REPLAY = "replay"           # pure-step replay from snapshot
@@ -44,11 +45,19 @@ class RecoveryTable:
 
     @classmethod
     def build(cls, state, *, replicated: bool = False,
-              parity: bool = False) -> "RecoveryTable":
+              parity: bool = False, sharded: bool = False) -> "RecoveryTable":
         """Construct the table for a train state.
 
         replicated: DP replica copies exist (pure-DP leaves) -> replica rung
         parity:     parity shards are maintained -> parity rung
+        sharded:    the loop runs on a mesh with shard-aware snapshots ->
+                    the shard_patch rung (restore only the injured shard's
+                    addressable bytes) leads every non-IV ladder.  The
+                    rung gates itself at recovery time (it aborts into
+                    the rest of the ladder when the report carries no
+                    (leaf, shard) attribution, when the state was donated
+                    or when no version-matched snapshot exists), so
+                    listing it here is safe for trap-detected faults too.
         """
         entries: Dict[str, TableEntry] = {}
         iv_names = sorted(state.get("iv", {}))
@@ -63,6 +72,8 @@ class RecoveryTable:
                 params = partners
             else:
                 rungs: List[str] = []
+                if sharded:
+                    rungs.append(RUNG_SHARD)
                 if replicated:
                     rungs.append(RUNG_REPLICA)
                 if parity:

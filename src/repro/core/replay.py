@@ -32,9 +32,16 @@ class ReplayResult:
     to_step: int
 
 
-def device_put_like(host_state, like_state=None):
-    """Move a host snapshot back to device buffers (sharded like the live
-    state when a reference is given)."""
+def device_put_like(host_state, like_state=None, shardings=None):
+    """Move a host snapshot back to device buffers.
+
+    ``like_state`` shards each leaf like the live reference; ``shardings``
+    (a pytree of shardings) serves the donated-mesh case where no live
+    reference exists — the snapshot upload itself is shard-local: every
+    device receives only its addressable slice of each leaf, never a full
+    replicated copy (DESIGN.md §5)."""
+    if like_state is None and shardings is not None:
+        return jax.device_put(host_state, shardings)
     if like_state is None:
         return jax.tree_util.tree_map(jax.numpy.asarray, host_state)
 
@@ -52,15 +59,18 @@ def device_put_like(host_state, like_state=None):
 
 def replay(step_fn: Callable, batch_fn: Callable, snapshot_state,
            from_step: int, to_step: int, *, like_state=None,
-           on_step: Optional[Callable] = None) -> ReplayResult:
+           shardings=None, on_step: Optional[Callable] = None
+           ) -> ReplayResult:
     """Replay ``step_fn`` from ``from_step`` (exclusive state snapshot taken
     *before* executing step ``from_step``) up to (but not including)
     ``to_step``.
 
     step_fn(state, batch) -> (state, metrics); batch_fn(step) -> batch.
+    ``shardings`` places the snapshot on a mesh when no ``like_state``
+    reference survives (donated loops).
     """
     assert to_step >= from_step, (from_step, to_step)
-    state = device_put_like(snapshot_state, like_state)
+    state = device_put_like(snapshot_state, like_state, shardings)
     for s in range(from_step, to_step):
         state, _ = step_fn(state, batch_fn(s))
         if on_step is not None:

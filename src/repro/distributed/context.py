@@ -1,11 +1,47 @@
-"""DistContext — the one object threaded through model code that knows how
-this program maps onto the device mesh.
+"""DistContext — the one object threaded through model AND resilience code
+that knows how this program maps onto the device mesh.
 
 Model code never touches ``jax.sharding`` directly: it calls
 ``ctx.constrain(x, spec...)`` (a no-op when running locally, e.g. in CPU unit
 tests) and family modules consult ``ctx.batch_axes`` / ``ctx.model_axis`` for
 shard_map specs.  This keeps every model definition runnable on a laptop and
 shardable on a 512-chip mesh with zero code changes.
+
+The contract
+------------
+
+A ``DistContext`` is a frozen value with exactly two states:
+
+* **local** (``mesh is None``, ``enabled == False``): every helper
+  degrades to the identity / size-1 answer.  Code written against the
+  context runs unchanged on one device — this is what keeps the entire
+  test suite and the smoke configs on 1 CPU device.
+* **meshed** (``enabled == True``): ``mesh`` is a live ``jax.sharding.Mesh``
+  whose axis names partition into ``batch_axes`` (data/pod parallelism)
+  and ``model_axis`` (tensor parallelism).  ``sharding(*spec)`` /
+  ``constrain(x, *spec)`` build ``NamedSharding``s on that mesh;
+  ``dp_size`` / ``tp_size`` report the axis products.
+
+Consumers and what they rely on:
+
+* **models** (``models/*``): ``constrain`` / ``constrain_batch`` for
+  activation layout hints; must tolerate the local no-op.
+* **partitioners** (``distributed/sharding.py``, ``launch/specs.py``):
+  derive every train-state leaf's ``PartitionSpec`` from
+  ``batch_axes``/``model_axis`` with divisibility guards, then
+  ``launch/specs.state_shardings`` turns them into ``NamedSharding``s.
+* **the resilience layer** (DESIGN.md §5): ``ChecksumCanary(...,
+  ctx=ctx)``, ``MicroCheckpointer(..., ctx=ctx)`` and the recovery
+  runtime key EVERYTHING on this object.  The canary derives its
+  shard-local digest layout from the leaves' ``NamedSharding``s (so the
+  state must be ``device_put`` with its specs BEFORE the canary is
+  built), snapshots record per-(leaf, shard) digests in mesh-flat device
+  order (``n_devices`` shards, ``device_order()``), and detection's only
+  cross-device communication is the all-reduced fault flag.  Passing
+  ``ctx=None`` (or a local context) reproduces the single-device
+  behaviour bit for bit — the resilience stack treats the context
+  exactly like model code does: one object, two states, no branches
+  leaking past construction time.
 """
 
 from __future__ import annotations
@@ -72,4 +108,24 @@ class DistContext:
     def tp_size(self) -> int:
         if not self.enabled:
             return 1
-        return self.mesh.shape[self.model_axis]
+        # a mesh without the model axis (pure DP, e.g. "--mesh 4") has
+        # tensor-parallel width 1
+        return self.mesh.shape.get(self.model_axis, 1)
+
+    # -- resilience-layer views ---------------------------------------------
+
+    @property
+    def n_devices(self) -> int:
+        """Total mesh size — the shard count of every sharded resilience
+        artifact (digest tables, bad masks, snapshot shard digests)."""
+        if not self.enabled:
+            return 1
+        return int(self.mesh.size)
+
+    def device_order(self) -> Tuple:
+        """Mesh devices in canonical (mesh-flat, row-major over axis
+        order) sequence — shard id ``d`` throughout the resilience layer
+        means this tuple's d-th device."""
+        if not self.enabled:
+            return tuple(jax.devices()[:1])
+        return tuple(self.mesh.devices.flatten())

@@ -1,4 +1,5 @@
-"""Partition-spec generation for every train-state leaf.
+"""Partition-spec generation for every train-state leaf — the single
+source of layout truth consumed by compilation AND resilience.
 
 Rules are name/shape driven over the flattened param tree.  Every rule goes
 through a divisibility guard — a dim that does not divide its mesh axis is
@@ -13,6 +14,22 @@ Layout summary (the baseline recipe; §Perf iterates on this):
     norms/scalars            -> replicated
     optimizer moments        -> same spec as their param
 Stacked (scan) leaves get leading ``None``s for the stack dims.
+
+Entry points: ``param_specs`` (params), ``opt_state_specs`` (optimizer
+moments, derived from the param specs so ZeRO-style co-sharding holds),
+``batch_specs`` (leading dim over the batch axes) and ``cache_specs``
+(decode caches).  ``launch/specs.state_shardings`` assembles them into the
+full train-state ``NamedSharding`` tree.
+
+The resilience layer consumes these specs DOWNSTREAM of ``device_put``
+rather than importing this module: ``kernels/digest.sharded_plan_for``
+reads each live leaf's ``NamedSharding`` (produced from the specs built
+here) to derive its shard-local digest layout, and micro-snapshots record
+per-shard slice maps from the same shardings.  That makes this module's
+guard behaviour load-bearing for detection too: whatever layout the specs
+choose — sharded or guard-replicated — the canary digests exactly the
+bytes each device actually owns, so spec changes here never need matching
+changes in the detection/recovery stack (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -39,13 +56,24 @@ def _axis_size(ctx: DistContext, axes) -> int:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
-    return int(np.prod([ctx.mesh.shape[a] for a in axes]))
+    # an axis the mesh doesn't have counts as size 1 (=> the guard
+    # replicates): a pure data-parallel mesh ("--mesh 4") simply has no
+    # "model" axis, and every TP rule must degrade to replication
+    return int(np.prod([ctx.mesh.shape.get(a, 1) for a in axes]))
 
 
 def _guard(ctx: DistContext, dim: int, axes) -> Optional[object]:
-    """Return axes if dim divides the axes' total size, else None."""
+    """Return axes if dim divides the axes' total size, else None.
+    Axes the mesh doesn't have are dropped first (pure-DP meshes carry
+    no "model" axis), so a returned spec never names a missing axis."""
     if axes is None:
         return None
+    if ctx.enabled:
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        names = tuple(a for a in names if a in ctx.mesh.shape)
+        if not names:
+            return None
+        axes = names[0] if isinstance(axes, str) else names
     size = _axis_size(ctx, axes)
     return axes if (size > 1 and dim % size == 0) else None
 

@@ -38,23 +38,34 @@ no-fault hot path.  This module replaces that with (DESIGN.md §4.2):
   inside their own jitted program.  ``core/fused_step.py`` uses this to
   run the canary check+arm INSIDE the jitted (donated) training step.
 
-Launch/sync/byte contract per detection mode, for state of ``B`` bytes
-and canary period ``K`` (the DESIGN.md §4.2 cost table in code form):
+Launch/sync/byte contract per detection mode, for state of ``B`` bytes,
+canary period ``K`` and mesh size ``D`` (the DESIGN.md §4.2/§5 cost
+table in code form; D=1 off-mesh):
 
-  ===================  ========  =============  ===========
+  ===================  ========  =============  ==================
   mode                 launches  host syncs     bytes/step
-  ===================  ========  =============  ===========
+  ===================  ========  =============  ==================
   per-leaf (seed)      O(L/K)    O(L/K)         ~2B/K
   fused check_and_arm  1         1 scalar       ~2B/K
   donated pair         2         1 scalar       ~2B/K
   in-step fused        0 extra*  1 scalar       ~2B/K
-  ===================  ========  =============  ===========
+  sharded (any mode)   same      same 1 scalar  ~2B/K (÷D per dev)
+  ===================  ========  =============  ==================
 
   *the in-step fused mode rides the step's own launch: the digest is a
   subcomputation of the jitted step (``core/fused_step.py``), so the
   no-fault hot path is 1 combined launch/step total — counted as one
   ``STATS.launches`` — at the cost of K rotation-specialised step
   executables.
+
+Mesh sharding (``ShardedDigestPlan``/``sharded_plan_for``; DESIGN.md §5)
+changes the *placement* of the work, not the contract: under shard_map
+every device packs and digests only its addressable shard rows against
+its own slice of the sharded (n_shards, L, 2) reference tables, and the
+single scalar the host fetches is the all-reduced any(fault) flag — the
+only cross-device communication on the no-fault path.  Shard digests are
+bit-identical to the single-device ``host_checksum`` oracle applied to
+each shard's bytes (``host_shard_checksums``).
 
 Instrumentation: ``STATS`` counts launches (one per digest invocation —
 each digest is one in-place pack + one ``row_checksums`` pallas_call,
@@ -73,7 +84,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.ops import segment_sum
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import checksum as _ck
 from repro.kernels import ref as _ref
@@ -381,6 +394,215 @@ def plan_for(tree) -> DigestPlan:
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _SHARDED_PLAN_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded digesting (DESIGN.md §5) — shard-local digests under shard_map
+#
+# On an N-device mesh the detection economics must not change: one combined
+# launch and ONE scalar host sync per step, with every device streaming only
+# its own addressable shard.  The unit of detection becomes the (leaf, shard)
+# pair: each device packs and checksums the rows of its local block, the
+# reference tables grow a leading shard dimension (n_shards, L, 2) and live
+# SHARDED over the mesh (each device compares only its own rows, on device),
+# and the only cross-device traffic on the no-fault path is the all-reduced
+# any(fault) scalar (one pmax over the mesh axes).  Fault-path attribution
+# resolves to (leaf, shard), which is what lets recovery restore only the
+# injured shard's addressable state (core/recover.py shard_patch rung).
+# ---------------------------------------------------------------------------
+
+def mesh_device_order(mesh: Mesh) -> Tuple:
+    """Canonical shard order: mesh devices flattened row-major over the
+    mesh axes IN ORDER.  Shard id ``d`` everywhere in this subsystem (bad
+    masks, reference-table rows, snapshot shard digests, FaultReport
+    shards) means the device at this flat position."""
+    return tuple(mesh.devices.flatten())
+
+
+def _leaf_pspec(x) -> P:
+    """The leaf's PartitionSpec padded to its rank (shard_map in_specs
+    want explicit entries)."""
+    spec = tuple(x.sharding.spec)
+    return P(*(spec + (None,) * (jnp.ndim(x) - len(spec))))
+
+
+class ShardedDigestPlan(DigestPlan):
+    """Per-shard packing layout + shard_map'd digest functions for one
+    (state structure, leaf shardings, mesh) triple.
+
+    The inherited layout (``specs``/``n_rows``/row maps) is computed over
+    the LOCAL shard sizes — every device owns an identical private layout
+    because GSPMD shard shapes are uniform — so the whole single-device
+    digest core (in-place pack kernel + one ``row_checksums`` pallas_call
+    + exact segment-sum combine) runs unchanged INSIDE ``shard_map``, once
+    per device, in the same single logical launch.  Global artifacts grow
+    a leading shard dim, sharded over all mesh axes flattened:
+
+      * packing buffer   (n_shards, local_padded)  — persistent + donated,
+      * digest tables    (n_shards, n_leaves, 2)   — row [d, i] = Fletcher
+        digest of leaf i's shard-d local block, bit-identical to
+        ``host_checksum`` of that block's bytes (the single-device oracle).
+
+    ``bytes_per_pass`` stays the GLOBAL accounting (sum over shards) so
+    the §4.2/§5 cost model reads the same: ~2B/K streamed per step total,
+    ~2B/(K·n_shards) per device.
+    """
+
+    def __init__(self, mesh: Mesh, treedef, keys: Tuple[str, ...],
+                 local_sizes: Tuple[int, ...], pspecs: Tuple[P, ...],
+                 local_shapes: Tuple[Tuple[int, ...], ...]):
+        super().__init__(treedef, keys, local_sizes)
+        self.mesh = mesh
+        self.axis_names = tuple(mesh.axis_names)
+        self.n_shards = int(mesh.size)
+        self.pspecs = pspecs                    # per leaf, canonical order
+        self.local_shapes = local_shapes        # per leaf, canonical order
+        #: specs for the shard-stacked artifacts: dim 0 distributes over
+        #: every mesh axis in order == ``mesh_device_order``
+        self.buf_spec = P(self.axis_names, None)
+        self.table_spec = P(self.axis_names, None, None)
+        # global accounting: every device streams its local pass
+        self.local_bytes_per_pass = self.bytes_per_pass
+        self.bytes_per_pass = self.bytes_per_pass * self.n_shards
+        self._local_digest_fns: Dict[Tuple[int, ...], object] = {}
+
+    # -- local core --------------------------------------------------------
+
+    def local_digest_fn(self, idx: Tuple[int, ...]):
+        """The UNWRAPPED per-device digest core ``(local_buf, local_leaves)
+        -> (local_buf, (len(idx), 2))`` over the local layout — the piece
+        ``check_arm_subcomputation`` embeds inside one shard_map together
+        with the on-device compare/arm and the fault-flag all-reduce."""
+        fn = self._local_digest_fns.get(idx)
+        if fn is None:
+            fn = DigestPlan._build_digest_fn(self, idx)
+            self._local_digest_fns[idx] = fn
+        return fn
+
+    def _local_block(self, i: int, leaf):
+        """Reshape a shard_map-local leaf block to the leaf's local shape
+        (shard_map hands blocks with size-1 sharded dims, not squeezed)."""
+        return leaf.reshape(self.local_shapes[i])
+
+    # -- shard_map wrapper -------------------------------------------------
+
+    def _build_digest_fn(self, idx: Tuple[int, ...]):
+        local = self.local_digest_fn(idx)
+
+        def local_fn(buf, *leaves):
+            blocks = [self._local_block(i, leaf)
+                      for i, leaf in zip(idx, leaves)]
+            b, t = local(buf[0], blocks)
+            return b[None], t[None]
+
+        fn = shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(self.buf_spec,) + tuple(self.pspecs[i] for i in idx),
+            out_specs=(self.buf_spec, self.table_spec),
+            check_rep=False)
+
+        def digest(buf, leaves):
+            return fn(buf, *leaves)
+
+        return digest
+
+    # -- persistent packing buffers (sharded) ------------------------------
+
+    def take_buffer(self, indices: Optional[Sequence[int]] = None
+                    ) -> jnp.ndarray:
+        idx = tuple(range(self.n_leaves)) if indices is None \
+            else tuple(indices)
+        buf = self._pack_bufs.get(idx)
+        if buf is None or buf.is_deleted():
+            n_rows = sum(self.specs[i].n_rows for i in idx)
+            padded = -(-n_rows // TILE_ROWS) * TILE_ROWS * LANES
+            buf = jax.device_put(
+                jnp.zeros((self.n_shards, padded), jnp.int32),
+                NamedSharding(self.mesh, self.buf_spec))
+            self._pack_bufs[idx] = buf
+        return buf
+
+    def buffer_pointer(self, indices: Optional[Sequence[int]] = None):
+        """Per-shard device addresses (tuple, mesh-flat order) — a sharded
+        array has one buffer per device, all of which must be stable."""
+        idx = tuple(range(self.n_leaves)) if indices is None \
+            else tuple(indices)
+        buf = self._pack_bufs.get(idx)
+        if buf is None:
+            return None
+        by_dev = {sh.device: sh.data.unsafe_buffer_pointer()
+                  for sh in buf.addressable_shards}
+        return tuple(by_dev[d] for d in mesh_device_order(self.mesh))
+
+    # -- public digesting --------------------------------------------------
+    # digest_table / digest_subset are inherited and now return sharded
+    # (n_shards, n, 2) tables; the per-leaf host views index the shard dim.
+
+    def digest_dict(self, tree) -> Dict[str, np.ndarray]:
+        """Host per-leaf PER-SHARD digests keyed by path: each value is
+        (n_shards, 2).  One launch + one transfer, as unsharded."""
+        table = fetch(self.digest_table(tree))        # (D, L, 2)
+        return {k: table[:, i] for i, k in enumerate(self.keys)}
+
+    def verify(self, tree, reference: Dict[str, np.ndarray]) -> List[str]:
+        """Leaf paths with ANY shard digest mismatching ``reference``
+        (values (n_shards, 2), as produced by ``digest_dict``)."""
+        current = self.digest_dict(tree)
+        bad = []
+        for k, ref_digest in reference.items():
+            cur = current.get(k)
+            if cur is None or not np.array_equal(cur, ref_digest):
+                bad.append(k)
+        return sorted(bad)
+
+
+_SHARDED_PLAN_CACHE: Dict[object, ShardedDigestPlan] = {}
+
+
+def _mesh_key(mesh: Mesh):
+    return (tuple(mesh.axis_names), tuple(mesh.shape.values()),
+            tuple(d.id for d in mesh.devices.flatten()))
+
+
+def sharded_plan_for(tree, mesh: Mesh) -> ShardedDigestPlan:
+    """The cached ShardedDigestPlan for ``tree``'s structure on ``mesh``.
+
+    Every leaf must already carry a ``NamedSharding`` on ``mesh`` (i.e. the
+    state has been ``device_put`` with its partition specs — see
+    ``launch/specs.state_shardings``): the plan's per-shard layout is
+    derived from those specs and cached by (mesh, structure, specs), so a
+    training run digests through one compiled shard_map program per leaf
+    subset with no per-step retracing."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    entries = []
+    for path, x in flat:
+        sharding = getattr(x, "sharding", None)
+        if not isinstance(sharding, NamedSharding):
+            raise ValueError(
+                f"sharded_plan_for requires NamedSharding leaves; "
+                f"{leaf_key(path)} has {type(sharding).__name__} — "
+                f"device_put the state with its specs first")
+        if _mesh_key(sharding.mesh) != _mesh_key(mesh):
+            raise ValueError(
+                f"leaf {leaf_key(path)} is sharded on a different mesh")
+        local_shape = sharding.shard_shape(jnp.shape(x))
+        entries.append((leaf_key(path), _leaf_pspec(x), local_shape,
+                        jnp.result_type(x).name))
+    entries.sort(key=lambda e: e[0])
+    key = (_mesh_key(mesh), treedef,
+           tuple((k, tuple(sp), ls, dt) for k, sp, ls, dt in entries))
+    plan = _SHARDED_PLAN_CACHE.get(key)
+    if plan is None:
+        keys = tuple(k for k, _, _, _ in entries)
+        local_sizes = tuple(int(np.prod(ls, dtype=np.int64))
+                            for _, _, ls, _ in entries)
+        pspecs = tuple(sp for _, sp, _, _ in entries)
+        local_shapes = tuple(ls for _, _, ls, _ in entries)
+        plan = ShardedDigestPlan(mesh, treedef, keys, local_sizes, pspecs,
+                                 local_shapes)
+        _SHARDED_PLAN_CACHE[key] = plan
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +633,18 @@ def check_arm_subcomputation(plan: DigestPlan, chk: Sequence[int],
     Pure/traceable: no host-side plan lookups survive into the traced
     path, so callers may embed ``fn`` inside their own jit — including a
     jitted step function that donates its state (core/fused_step.py).
+
+    For a ``ShardedDigestPlan`` the same signature is served by a
+    shard_map'd core (one logical launch; every device digests and
+    compares only its own shard rows): ``ref_read``/``ref_write`` are the
+    sharded (n_shards, L, 2) generation tables, ``bad_mask`` is the
+    sharded (n_shards, len(chk)) per-(leaf, shard) mismatch matrix that
+    stays on device until fault-path attribution, and ``any_mismatch`` is
+    the all-reduced (pmax over every mesh axis) replicated scalar — the
+    ONLY cross-device communication on the no-fault path.
     """
+    if isinstance(plan, ShardedDigestPlan):
+        return _sharded_check_arm_subcomputation(plan, chk, arm)
     chk = tuple(chk)
     arm = tuple(arm)
     union = chk + arm
@@ -427,6 +660,48 @@ def check_arm_subcomputation(plan: DigestPlan, chk: Sequence[int],
         new_write = ref_write.at[arm_rows].set(table[nc:]) \
             if arm else ref_write
         return buf, jnp.any(bad), bad, new_write
+
+    return fn, union
+
+
+def _sharded_check_arm_subcomputation(plan: ShardedDigestPlan,
+                                      chk: Sequence[int],
+                                      arm: Sequence[int]):
+    """Mesh variant of ``check_arm_subcomputation`` — one shard_map whose
+    body runs the per-device digest core, the on-device compare of the
+    device's own reference rows, the in-place arm scatter into the
+    device's own write rows, and the any(fault) all-reduce."""
+    chk = tuple(chk)
+    arm = tuple(arm)
+    union = chk + arm
+    local_digest = plan.local_digest_fn(union)
+    chk_rows = np.asarray(chk, np.int32)
+    arm_rows = np.asarray(arm, np.int32)
+    nc = len(chk)
+    axes = plan.axis_names
+
+    def local_fn(buf, ref_read, ref_write, *leaves):
+        blocks = [plan._local_block(i, leaf)
+                  for i, leaf in zip(union, leaves)]
+        b, table = local_digest(buf[0], blocks)       # per-device local pass
+        bad = jnp.any(table[:nc] != ref_read[0, chk_rows], axis=1) \
+            if nc else jnp.zeros((0,), bool)
+        # the fault flag is the only cross-device hop on the no-fault path
+        flag = jax.lax.pmax(jnp.any(bad).astype(jnp.int32), axes) > 0
+        new_write = ref_write.at[0, arm_rows].set(table[nc:]) \
+            if arm else ref_write
+        return b[None], flag, bad[None], new_write
+
+    smapped = shard_map(
+        local_fn, mesh=plan.mesh,
+        in_specs=(plan.buf_spec, plan.table_spec, plan.table_spec)
+        + tuple(plan.pspecs[i] for i in union),
+        out_specs=(plan.buf_spec, P(), P(plan.axis_names, None),
+                   plan.table_spec),
+        check_rep=False)
+
+    def fn(buf, leaves, ref_read, ref_write):
+        return smapped(buf, ref_read, ref_write, *leaves)
 
     return fn, union
 
@@ -480,3 +755,23 @@ def host_verify_tree(tree, reference: Dict[str, np.ndarray]) -> List[str]:
         if cur is None or not np.array_equal(cur, ref_digest):
             bad.append(k)
     return sorted(bad)
+
+
+def shard_indices(x) -> List[Tuple]:
+    """Per-shard global index tuples of a NamedSharding array, in
+    mesh-flat shard order — the slice each shard id addresses.  This is
+    the metadata micro-snapshots store so shard-local restore can carve a
+    single shard's bytes out of a host copy."""
+    m = x.sharding.devices_indices_map(jnp.shape(x))
+    return [m[d] for d in mesh_device_order(x.sharding.mesh)]
+
+
+def host_shard_checksums(x) -> np.ndarray:
+    """(n_shards, 2) host digests of a sharded array, shard order matching
+    the sharded digest tables — the single-device uint32 oracle the kernel
+    path is asserted bit-identical against.  (Snapshot certification does
+    NOT route through here: ``core/microcheckpoint.py`` hashes its stored
+    host copy's slices directly via ``host_checksum``, so it never
+    re-fetches the device.)"""
+    host = np.asarray(x)
+    return np.stack([host_checksum(host[idx]) for idx in shard_indices(x)])

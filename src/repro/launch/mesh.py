@@ -26,6 +26,37 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def parse_mesh(spec: Optional[str]):
+    """``--mesh`` strings to (shape, axes): "4" -> data-parallel only,
+    "4,2" -> ("data", "model"), "2,4,2" -> ("pod", "data", "model")."""
+    if not spec:
+        return None, None
+    shape = tuple(int(s) for s in spec.replace("x", ",").split(",") if s)
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}.get(len(shape))
+    if axes is None:
+        raise ValueError(f"--mesh takes 1-3 comma-separated sizes, got {spec!r}")
+    return shape, axes
+
+
+def make_context(mesh_spec: Optional[str]):
+    """DistContext for a ``--mesh`` knob (None off-mesh) — the shared
+    entry point of the train/serve drivers' mesh flags.  On CPU, force
+    devices first: XLA_FLAGS=--xla_force_host_platform_device_count=N."""
+    shape, axes = parse_mesh(mesh_spec)
+    if shape is None:
+        return None
+    need = int(np.prod(shape))
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"--mesh {mesh_spec} needs {need} devices, have {have} — on "
+            f"CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need}")
+    from repro.distributed.context import DistContext
+    return DistContext.for_mesh(make_mesh(shape, axes))
+
+
 def make_degraded_mesh(lost_data_slices: int = 1, *, multi_pod: bool = False):
     """Elastic re-mesh after losing ``lost_data_slices`` rows of the data
     axis (a failed host/board takes out a 16-chip model row).  The job

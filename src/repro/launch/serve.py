@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import FaultReport, flip_bit, sample_plan, inject
 from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_context
 from repro.models.registry import get_model
 from repro.train.loop import make_train_state
 
@@ -63,7 +64,7 @@ class ServeReport:
 def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
           seed: int = 0, inject_every: int = 0, verbose: bool = True,
           canary_slices: int = 4, donate: bool = False,
-          fused_detect: bool = False) -> Dict:
+          fused_detect: bool = False, mesh: Optional[str] = None) -> Dict:
     """Recovery-wrapped batched serving.  Detection: free trap (non-finite
     logits) + a rotating checksum canary over the decode cache —
     bit-flips in a KV cache rarely drive logits non-finite (RMSNorm masks
@@ -81,7 +82,12 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     slice ``t % K`` and the arm of the updated cache's next slice ride the
     decode's own launch — 1 combined launch + 1 scalar sync per token,
     donated or not, at the cost of K rotation-specialised decode
-    compilations."""
+    compilations.
+
+    ``mesh="dp,tp"`` serves off a device mesh (DESIGN.md §5): params and
+    decode cache shard per ``distributed/sharding.py``, the cache canary
+    goes shard-local (per-device digests, all-reduced fault flag), and
+    prefix replay rebuilds the sharded cache in place."""
     from repro.core import ChecksumCanary
 
     m = cfg.model
@@ -89,6 +95,7 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     key = jax.random.PRNGKey(seed)
     params = model.init(m, key)
     pipe = TokenPipeline(m.vocab_size, prompt_len, n_requests, seed=seed)
+    ctx = make_context(mesh)
 
     batch = pipe.batch_at(0)
     if m.n_enc_layers:
@@ -96,23 +103,45 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     if m.patch_dim:
         batch = pipe.with_patches(batch, 8, m.patch_dim, 0)
 
+    cache_sh = None
+    if ctx is not None:
+        from repro.launch.specs import batch_shardings, param_shardings
+        psh, _ = param_shardings(ctx, cfg, params)
+        params = jax.device_put(params, psh)
+        bsh, _ = batch_shardings(ctx, batch)
+        batch = jax.device_put(batch, bsh)
+
     max_len = prompt_len + gen_tokens + 8
     prefill = jax.jit(lambda p, b: model.prefill(p, m, b, None,
                                                  max_len=max_len))
-    decode = jax.jit(lambda p, c, t: model.decode_step(p, m, c, t, None),
-                     donate_argnums=(1,) if donate else ())
+
+    def raw_decode_fn(p, c, t):
+        lg, nc = model.decode_step(p, m, c, t, None)
+        if cache_sh is not None:
+            # mesh: pin the updated cache to the canonical layout — the
+            # per-token invariant the shard-local canary plans against
+            nc = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, nc, cache_sh)
+        return lg, nc
+
+    decode = jax.jit(raw_decode_fn, donate_argnums=(1,) if donate else ())
 
     rng = random.Random(seed + 3)
     rep = ServeReport(requests=n_requests)
 
     logits, cache = prefill(params, batch)
+    if ctx is not None:
+        from repro.launch.specs import cache_shardings
+        cache_sh, _ = cache_shardings(ctx, cache)
+        cache = jax.device_put(cache, cache_sh)
     token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     # The decode-INPUT log — the replay source.  inputs[0] is the prefill's
     # token; each accepted decode appends its output (the next input).
     # (An earlier version logged outputs only and replayed one token off —
     # the cache canary caught the bit-level divergence immediately.)
     inputs: List[np.ndarray] = [np.asarray(token)]
-    canary = ChecksumCanary({"cache": cache}, n_slices=canary_slices) \
+    canary = ChecksumCanary({"cache": cache}, n_slices=canary_slices,
+                            ctx=ctx) \
         if canary_slices else None
     fused = None
     if fused_detect:
@@ -120,7 +149,7 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
             raise ValueError("fused_detect requires canary_slices > 0")
 
         def raw_decode(ctree, p, tok):
-            lg, nc = model.decode_step(p, m, ctree["cache"], tok, None)
+            lg, nc = raw_decode_fn(p, ctree["cache"], tok)
             return {"cache": nc}, lg
 
         # the factory jits decode + canary together; the plain jitted
@@ -193,6 +222,10 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
                   f"{len(inputs) - 1}-token prefix")
         t0 = time.perf_counter()
         logits, cache = prefill(params, batch)
+        if cache_sh is not None:
+            # rebuild on the mesh: the replayed cache must re-enter the
+            # canonical sharded layout the canary plans against
+            cache = jax.device_put(cache, cache_sh)
         for prev in inputs[:-1]:
             _, cache = decode(params, cache, jnp.asarray(prev))
         token = jnp.asarray(inputs[-1])
@@ -221,6 +254,11 @@ def main():
     ap.add_argument("--fused-detect", action="store_true",
                     help="run the cache canary INSIDE the jitted decode "
                          "(1 combined launch + 1 scalar sync per token)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve off a device mesh, e.g. '4,2' (CPU repro: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8); params/cache shard, the cache canary "
+                         "goes shard-local")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -229,7 +267,7 @@ def main():
     out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
                 gen_tokens=args.gen, seed=args.seed,
                 inject_every=args.inject, donate=args.donate,
-                fused_detect=args.fused_detect)
+                fused_detect=args.fused_detect, mesh=args.mesh)
     print(json.dumps(out, indent=1))
 
 

@@ -102,6 +102,13 @@ def state_shardings(ctx: DistContext, cfg: ArchConfig, state_st):
     return _named(ctx.mesh, specs), specs
 
 
+def param_shardings(ctx: DistContext, cfg: ArchConfig, params_st):
+    """NamedSharding tree for a bare param tree (serving-side twin of
+    ``state_shardings``)."""
+    pspecs = param_specs(ctx, params_st, cfg.sharding, cfg.model)
+    return _named(ctx.mesh, pspecs), pspecs
+
+
 def batch_shardings(ctx: DistContext, batch_st):
     specs = batch_specs(ctx, batch_st)
     return _named(ctx.mesh, specs), specs

@@ -46,7 +46,12 @@ from repro.core import (
 )
 from repro.core.detect import LOSS_WINDOW
 from repro.data.pipeline import TokenPipeline
-from repro.train.loop import make_train_state, make_train_step
+from repro.launch.mesh import make_context
+from repro.train.loop import (
+    make_train_state,
+    make_train_step,
+    pin_state_shardings,
+)
 
 
 @dataclass
@@ -89,7 +94,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           inject_every: int = 0, inject_target: str = "params",
           canary_slices: int = 4, detectors: bool = True,
           donate: bool = False, fused_detect: bool = False,
-          fused_warm: str = "eager", verbose: bool = True) -> Dict:
+          fused_warm: str = "eager", mesh: Optional[str] = None,
+          verbose: bool = True) -> Dict:
     """Run the recovery-wrapped loop; returns the loop report dict.
 
     ``donate=True`` is the production compilation setting: the step is
@@ -111,16 +117,38 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     ``'lazy'`` compiles each rotation on first use).  Detection semantics
     and digests are bit-identical to the unfused paths, which are left
     untouched when the flag is off.
+
+    ``mesh="dp,tp"`` (e.g. ``"4,2"``) runs the WHOLE resilient loop on a
+    device mesh (DESIGN.md §5): the state is sharded per
+    ``launch/specs.state_shardings`` and pinned there every step, the
+    canary goes shard-local (per-device digests + per-device generation
+    tables; the one fetched scalar is the all-reduced fault flag),
+    snapshots carry per-(leaf, shard) digests, and recovery gains the
+    shard_patch rung (restore only the injured shard's addressable
+    bytes).  Composes with ``donate``/``fused_detect`` unchanged.
     """
     key = jax.random.PRNGKey(seed)
     pipe = TokenPipeline(cfg.model.vocab_size, seq_len, global_batch,
                          seed=seed)
+    ctx = make_context(mesh)
     state = make_train_state(cfg, key, global_batch=global_batch)
-    step_fn = jax.jit(make_train_step(cfg, global_batch=global_batch),
-                      donate_argnums=(0,) if donate else ())
-    bfn = lambda s: batch_for(cfg, pipe, s)
+    raw_step = make_train_step(cfg, global_batch=global_batch)
+    shardings = None
+    if ctx is not None:
+        from repro.launch.specs import batch_shardings, state_shardings
+        shardings, _ = state_shardings(ctx, cfg, state)
+        state = jax.device_put(state, shardings)
+        # pin the output layout to the input layout: keeps the state's
+        # sharding a per-step invariant (donation-compatible, no drift
+        # under the canary's digest plan)
+        raw_step = pin_state_shardings(raw_step, shardings)
+        bsh, _ = batch_shardings(ctx, batch_for(cfg, pipe, 0))
+        bfn = lambda s: jax.device_put(batch_for(cfg, pipe, s), bsh)
+    else:
+        bfn = lambda s: batch_for(cfg, pipe, s)
+    step_fn = jax.jit(raw_step, donate_argnums=(0,) if donate else ())
 
-    micro = MicroCheckpointer(interval=snapshot_interval)
+    micro = MicroCheckpointer(interval=snapshot_interval, ctx=ctx)
     ckpt = CheckpointManager(checkpoint_dir,
                              interval=checkpoint_interval) \
         if checkpoint_dir else None
@@ -128,8 +156,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
         step_fn=step_fn,
         batch_fn=bfn, iv_registry=promote(cfg, global_batch), micro=micro,
         checkpoint=ckpt.loader(state) if ckpt else None,
-        donated=donate)
-    canary = ChecksumCanary(state, n_slices=canary_slices) \
+        donated=donate, shardings=shardings)
+    canary = ChecksumCanary(state, n_slices=canary_slices, ctx=ctx) \
         if detectors else None
     fused = None
     if fused_detect:
@@ -138,9 +166,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
                              "(the canary IS the in-step detector)")
         # the factory jits the RAW step together with the canary check/arm;
         # the separately jitted step_fn above still serves replay/recovery
-        fused = canary.fuse_into_step(
-            make_train_step(cfg, global_batch=global_batch),
-            donate=donate, warm=fused_warm)
+        fused = canary.fuse_into_step(raw_step, donate=donate,
+                                      warm=fused_warm)
         if fused_warm == "eager":
             # compile all K rotation executables BEFORE the loop so the
             # first step's wall time doesn't absorb them ('lazy' keeps
@@ -255,6 +282,9 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
         ckpt.wait()
     out = rep.summary()
     out["recovery"] = runtime.summary()
+    if ctx is not None:
+        out["mesh"] = {"shape": dict(ctx.mesh.shape),
+                       "devices": ctx.n_devices}
     return out
 
 
@@ -285,6 +315,12 @@ def main():
                     choices=["eager", "lazy"],
                     help="compile the K fused step executables up front "
                          "(eager) or on first use of each rotation (lazy)")
+    ap.add_argument("--mesh", default=None,
+                    help="run on a device mesh, e.g. '4,2' = 4-way data x "
+                         "2-way model parallel (CPU repro: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8); "
+                         "detection goes shard-local, recovery gains the "
+                         "shard_patch rung")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -299,7 +335,8 @@ def main():
                 inject_target=args.inject_target,
                 donate=args.donate,
                 fused_detect=args.fused_detect,
-                fused_warm=args.fused_warm)
+                fused_warm=args.fused_warm,
+                mesh=args.mesh)
     print(json.dumps(out, indent=1) if args.json else out)
 
 

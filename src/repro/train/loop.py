@@ -125,6 +125,27 @@ def make_train_step(arch_cfg, ctx=None, global_batch: int = 0,
     return train_step
 
 
+def pin_state_shardings(step_fn: Callable, shardings) -> Callable:
+    """Wrap ``step_fn(state, *args) -> (new_state, aux)`` so the output
+    state is sharding-constrained to ``shardings`` (the canonical
+    ``launch/specs.state_shardings`` tree).
+
+    Mesh loops need this pin: GSPMD is free to pick different output
+    shardings than the inputs for some leaves (it does, e.g. for norm
+    scales), which would reshard the state a little every step, defeat
+    donation's in-place buffer reuse (donor and output layouts must
+    match), and hand the shard-local canary a state whose layout drifts
+    from the one its digest plan was built for.  With the pin the state's
+    layout is a per-step invariant."""
+    def fn(state, *args):
+        new_state, aux = step_fn(state, *args)
+        new_state = jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, new_state, shardings)
+        return new_state, aux
+
+    return fn
+
+
 def make_prefill_step(arch_cfg, ctx=None, max_len: Optional[int] = None):
     model = get_model(arch_cfg.model)
     mcfg = arch_cfg.model

@@ -205,6 +205,42 @@ def test_refresh_subset_updates_reference_rows():
     assert report is not None and report.leaves == ["tok"]
 
 
+def test_partial_refresh_keeps_generation_and_unrelated_slices():
+    """Regression for the partial-refresh contract (see
+    ``ChecksumCanary.refresh``): an explicit ``keys=`` refresh must NOT
+    bump the generation and must not invalidate any other slice's armed
+    reference.  A generation bump here would swap the read/write roles of
+    the double-buffered pair mid-rotation, so the donated pair's next
+    ``check`` would verify a slice against rows armed two generations ago
+    (an older state version) and fire a spurious fault."""
+    tree = _tree()
+    canary = ChecksumCanary(tree, n_slices=3)
+    step = _toy_step()
+
+    # donated-style pair over a MUTATING state: every check verifies the
+    # same version the matching arm digested
+    state = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), tree)
+    for s in range(3):
+        canary.arm_current(s, state)
+        assert canary.check(s, state) is None
+        state = step(state)
+
+    gen = canary.generation
+    canary.arm_current(3, state)
+    # mid-generation targeted repair of ONE leaf (its row is patched in
+    # both tables; nothing else may change)
+    canary.refresh(state, keys=["opt/m"])
+    assert canary.generation == gen + 1  # only arm_current's own bump
+    # the pending slice's armed reference must still verify, and the
+    # following full rotation must stay trap-free
+    assert canary.check(3, state) is None
+    state = step(state)
+    for s in range(4, 7):
+        canary.arm_current(s, state)
+        assert canary.check(s, state) is None, s
+        state = step(state)
+
+
 # ---------------------------------------------------------------------------
 # donation contract: the resilient hot path survives donate_argnums
 # ---------------------------------------------------------------------------
