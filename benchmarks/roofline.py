@@ -77,5 +77,5 @@ def render(out: Dict, mesh: str = "single") -> str:
     if skips:
         lines.append(f"Skipped ({len(skips)}): " + ", ".join(
             f"{r['arch']}x{r['shape']}" for r in skips) +
-            " — full-attention archs at 500k decode (DESIGN.md §7).")
+            " — full-attention archs at 500k decode (DESIGN.md §8).")
     return "\n".join(lines)

@@ -46,41 +46,51 @@ def main():
           f"per workload on a 48-core x86 box)")
     print("=" * 72, flush=True)
 
-    print("\n[1/6] building campaign (fault-free reference trajectory)...",
+    print("\n[1/7] building campaign (fault-free reference trajectory)...",
           flush=True)
     campaign = Campaign()
 
     results = {}
 
-    print("[2/6] injection outcomes (Tables 3-5)...", flush=True)
+    print("[2/7] injection outcomes (Tables 3-5)...", flush=True)
     out1 = injection_outcomes.run(campaign, n_trials=n)
     results["injection_outcomes"] = {k: v for k, v in out1.items()
                                      if not k.startswith("_")}
     print()
     print(injection_outcomes.render(out1))
 
-    print("\n[3/6] recovery rate/time + CARE ablation (Figs 7, 8, 10)...",
+    print("\n[3/7] recovery rate/time + CARE ablation (Figs 7, 8, 10)...",
           flush=True)
     out2 = recovery.run(campaign, n_trials=n)
     results["recovery"] = out2
     print()
     print(recovery.render(out2))
 
-    print("\n[4/6] no-fault overhead (Fig 9)...", flush=True)
+    print("\n[4/7] no-fault overhead (Fig 9)...", flush=True)
     out3 = overhead.run(campaign, steps=10 if args.quick else 30)
     results["overhead"] = out3
     print()
     print(overhead.render(out3))
 
-    print("\n[5/6] recoverable IVs (Table 6)...", flush=True)
+    print("\n[5/7] recoverable IVs (Table 6)...", flush=True)
     out4 = recoverable_ivs.run()
     results["recoverable_ivs"] = out4
     print()
     print(recoverable_ivs.render(out4))
 
-    print("\n[6/6] downtime per fault (title claim)...", flush=True)
+    print("\n[6/7] serving SLO under a fault storm...", flush=True)
+    from benchmarks import serving_slo
+    out_serve = serving_slo.run(n_requests=8 if args.quick else 24,
+                                inject_every=6 if args.quick else 8)
+    results["serving"] = out_serve
+    print()
+    print(serving_slo.render(out_serve))
+    print(f"wrote {serving_slo.write_bench(out_serve)}")
+
+    print("\n[7/7] downtime per fault (title claim)...", flush=True)
     from benchmarks import downtime
-    out6 = downtime.run(campaign)
+    out6 = downtime.run(campaign, n_trials=12 if args.quick else 24,
+                        serving=out_serve)
     results["downtime"] = out6
     print()
     print(downtime.render(out6))

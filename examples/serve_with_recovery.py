@@ -1,7 +1,8 @@
-"""Batched serving under transient faults: the KV cache is corrupted
-mid-generation; the runtime detects it and rebuilds the cache by prefix
-replay (the serving analogue of the paper's RSI replay) instead of
-dropping the requests.
+"""Continuous-batching serving under transient faults: a bit flip lands
+in ONE slot's decode state mid-generation; the per-slot canary attributes
+it, that slot alone is evicted to prefix replay (the serving analogue of
+the paper's RSI replay), and every other slot keeps decoding the very
+next engine step — no request is dropped.
 
     PYTHONPATH=src python examples/serve_with_recovery.py
 """
@@ -19,20 +20,20 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="batch slots (0: min(4, requests))")
     ap.add_argument("--inject", type=int, default=6,
-                    help="corrupt the cache every N generated tokens")
+                    help="flip one bit in a slot's decode state every N "
+                         "accepted tokens")
     ap.add_argument("--donate", action="store_true",
-                    help="donate the decode cache into the step (in-place "
-                         "KV update); the canary checks pre-decode")
-    ap.add_argument("--fused-detect", action="store_true",
-                    help="run the cache canary INSIDE the jitted decode "
-                         "(1 combined launch + 1 scalar sync per token)")
+                    help="donate the slot-major cache into the fused step "
+                         "(in-place KV update)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
-                gen_tokens=args.gen, inject_every=args.inject, verbose=True,
-                donate=args.donate, fused_detect=args.fused_detect)
+                gen_tokens=args.gen, inject_every=args.inject,
+                n_slots=args.slots, donate=args.donate, verbose=False)
     print(json.dumps(out, indent=1))
 
 

@@ -39,6 +39,7 @@ to (leaf, shard) pairs so recovery can restore a single injured shard.
 from __future__ import annotations
 
 import math
+import re
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +54,43 @@ from repro.kernels.ops import rotating_slice
 #: ``deque(maxlen=LOSS_WINDOW)`` history (unbounded lists grew without
 #: limit over long runs).
 LOSS_WINDOW = 8
+
+# ---------------------------------------------------------------------------
+# Slot-slice canary mapping (serving engine; DESIGN.md §6)
+#
+# The serving engine lays its decode state out slot-major — every cache
+# leaf carries a leading ``[slot]`` axis — and protects it with an ordinary
+# ChecksumCanary built over a *slot view*: a tree whose top-level keys are
+# ``slot000``, ``slot001``, ... each holding that slot's slice of every
+# leaf.  The canary needs no slot awareness at all: its digest units are
+# simply (leaf, slot) pairs by construction, so the rotating checksum
+# attributes a fault to a specific slot for free and recovery can evict
+# exactly the injured requests.
+# ---------------------------------------------------------------------------
+
+_SLOT_RE = re.compile(r"^slot(\d+)/")
+
+
+def slot_leaf_prefix(slot: int) -> str:
+    """Canonical view key for one slot (zero-padded so string-sorted plan
+    keys group by slot)."""
+    return f"slot{slot:03d}"
+
+
+def slot_view(tree, n_slots: int) -> Dict:
+    """Per-slot view of a slot-major tree (every leaf ``[slot, ...]``).
+
+    Inside a jitted program the slices are free (fused static-index
+    gathers); outside they alias device memory.  The view's digest-plan
+    keys are ``slotNNN/<leaf path>`` — the (leaf, slot) canary units."""
+    return {slot_leaf_prefix(u): jax.tree_util.tree_map(lambda l: l[u], tree)
+            for u in range(n_slots)}
+
+
+def slot_of_leaf(key: str) -> Optional[int]:
+    """Slot id encoded in a slot-view leaf path (None for non-slot keys)."""
+    m = _SLOT_RE.match(key)
+    return int(m.group(1)) if m else None
 
 
 @dataclass
@@ -85,6 +123,16 @@ class FaultReport:
                 self.leaves = res
             self.resolver = None
         return self.leaves
+
+    def injured_slots(self) -> List[int]:
+        """Slot ids named by a slot-view canary report (serving engine).
+
+        Resolves deferred attribution, then parses the ``slotNNN/`` prefix
+        of every corrupted leaf path.  Empty for non-slot canaries or when
+        only free traps fired (the engine then falls back to its per-slot
+        non-finite flags)."""
+        return sorted({s for s in (slot_of_leaf(k) for k in self.resolve())
+                       if s is not None})
 
     def __str__(self):
         where = f" leaves={self.leaves[:3]}{'...' if len(self.leaves) > 3 else ''}" \

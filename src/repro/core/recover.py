@@ -398,6 +398,83 @@ class RecoveryRuntime:
 
 
 # ---------------------------------------------------------------------------
+# Serving recovery policy — slot-scoped eviction vs whole-state ladder
+# ---------------------------------------------------------------------------
+#
+# The training runtime above walks a per-leaf ladder because every rung can
+# repair state IN PLACE.  The serving engine has a cheaper primitive the
+# trainer lacks: each batch slot's decode state is rebuildable from its
+# request's token log (prefix replay — the serving RSI), and the slot-view
+# canary attributes a fault to (leaf, slot).  The policy below decides, per
+# FaultReport, between
+#
+#   * ``slots`` — evict ONLY the injured slots to prefix replay; healthy
+#     slots keep decoding the very next engine step.  Requires slot
+#     attribution (checksum units or per-slot non-finite flags) and bounds
+#     the suspect-token window:
+#
+#       - checksum: the in-step fused canary checks each row against the
+#         digest armed ONE step earlier (the generation tables alternate
+#         every step), so a mismatch proves the corruption arose in the
+#         single inter-step gap just crossed.  The only corrupt-derived
+#         token is the detection step's own output, which the engine
+#         discards for evicted slots — zero ACCEPTED tokens are suspect,
+#         retract = 0.  (This is also what makes the storm livelock-free:
+#         a fault costs eviction + replay, never accepted progress.)
+#       - nonfinite: the free trap fires only when the poison reaches the
+#         logits, which for recurrent/SSM-style caches can lag the flip by
+#         several steps.  Retract the last K-1 accepted tokens — the
+#         at-rest window the rotating canary leaves unchecked between a
+#         unit's check and its next arm — as the conservative bound.
+#
+#     tests/test_serving.py pins the bit-exactness of both paths (replay
+#     determinism regenerates retracted-but-clean tokens identically).
+#   * ``engine`` — no slot attribution (e.g. an external signal): evict
+#     every active slot — the serving analogue of the trainer's
+#     whole-state replay rung.  Without a canary bound on detection
+#     latency the retraction must be the full log (replay from prompt).
+
+
+@dataclass
+class ServingRecoveryPlan:
+    """What the engine must do about one FaultReport."""
+    scope: str                     # 'slots' | 'engine'
+    slots: List[int]               # slots to evict (scope='slots')
+    retract: Optional[int] = None  # suspect tokens to rescind; None = all
+    reason: str = ""
+
+
+def plan_serving_recovery(report: FaultReport, *, n_slices: int,
+                          nonfinite_slots: Sequence[int] = ()
+                          ) -> ServingRecoveryPlan:
+    """Slot-scoped eviction vs whole-state eviction for a serving fault.
+
+    ``n_slices``       : the canary's K (0 = no canary: free traps only).
+    ``nonfinite_slots``: active slots whose logits went non-finite this
+                         step (the engine's free trap — computed in-launch
+                         and fetched with the token payload).
+    """
+    slots = set(report.injured_slots()) if report is not None else set()
+    slots.update(nonfinite_slots)
+    checksum = report is not None and report.detector == "checksum"
+    if checksum:
+        # one-step detection latency (checked row == row armed last step):
+        # no accepted token predates the corruption — nothing to rescind
+        retract = 0
+    else:
+        # nonfinite trap: poison may have sat in the unchecked at-rest
+        # window for up to K-1 steps before reaching the logits
+        retract = max(0, n_slices - 1) if n_slices else None
+    if slots:
+        return ServingRecoveryPlan(
+            scope="slots", slots=sorted(slots), retract=retract,
+            reason=f"slot attribution ({report.detector if report else 'nonfinite'})")
+    return ServingRecoveryPlan(
+        scope="engine", slots=[], retract=None,
+        reason="no slot attribution — evict all active slots")
+
+
+# ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
 

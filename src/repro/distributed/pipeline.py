@@ -1,4 +1,4 @@
-"""GPipe-style pipeline parallelism over a mesh axis (DESIGN §6: optional
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN §7: optional
 PP across the 'pod' axis at multi-pod scale).
 
 `gpipe(stage_fn, n_stages, axis)` builds a shard_map-able SPMD program:

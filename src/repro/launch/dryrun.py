@@ -69,7 +69,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     if shape_name in cfg.skipped_shapes():
         rec.update(status="skipped",
                    reason="full-attention arch: long_500k requires "
-                          "sub-quadratic attention (DESIGN.md §7)")
+                          "sub-quadratic attention (DESIGN.md §8)")
         return rec
 
     if variant:

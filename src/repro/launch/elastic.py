@@ -1,4 +1,4 @@
-"""Elastic scaling + straggler/failure mitigation (DESIGN §6).
+"""Elastic scaling + straggler/failure mitigation (DESIGN §7).
 
 At 1000+-node scale the dominant non-transient failure is a lost host/board:
 a 16-chip row of the data axis disappears.  Classic response: kill the job,

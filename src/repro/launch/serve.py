@@ -1,241 +1,101 @@
-"""Recovery-wrapped batched serving driver.
+"""Resilient serving CLI — a thin driver over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch iterpro-100m --smoke \
-        --requests 16 --prompt-len 32 --gen 32 --inject 20
+        --requests 8 --prompt-len 16 --gen 12 --inject 5
 
-Serving under IterPro: the decode loop state (params + KV/recurrent cache +
-position counters) is the protected state.  A transient fault that corrupts
-the cache or a position counter is detected by the free traps (non-finite
-logits) or the rotating canary, and repaired by:
-  * Eq. (1) — the decode position counters are affine IVs (pos, tokens_out);
-  * **prefix replay** — the generated prefix is the serving analogue of the
-    paper's RSI: re-running prefill + the accepted tokens rebuilds an exact
-    cache from the (tiny) token log instead of dropping the request.
+Everything serving-shaped lives in ``repro.serving``: the request queue,
+the iteration-level scheduler over slot-major decode state, the per-slot
+canary slice, and slot-isolated recovery (injured slots evict to prefix
+replay; healthy slots keep decoding the very next engine step).  This
+module only (a) turns CLI knobs into an engine + a request batch, (b)
+seeds EVERY RNG in play — ``random``, numpy, and the JAX param key — from
+one ``--seed`` so injection campaigns are reproducible run-to-run, and
+(c) reports the engine's summary (now with p50/p99 percentiles next to
+the means).
+
+Composition knobs mirror the training path: ``--donate`` donates the
+slot-major cache into the fused step (in-place KV update), detection is
+ALWAYS in-step fused (1 launch + 1 scalar fault sync per engine step —
+the ``--fused-detect`` flag of the old fixed-batch driver is accepted
+for compatibility and is a no-op), and ``--mesh`` serves off a device
+mesh with sharded params, a replicated slot-major cache, and a
+shard-local canary.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import math
 import random
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import FaultReport, flip_bit, sample_plan, inject
-from repro.data.pipeline import TokenPipeline
-from repro.launch.mesh import make_context
-from repro.models.registry import get_model
-from repro.train.loop import make_train_state
+from repro.serving import Request, ServingEngine
+from repro.serving.engine import ServingReport   # noqa: F401 (re-export)
+
+#: compat alias — the old fixed-batch driver exposed a ServeReport; the
+#: engine's report (superset: percentiles, slot/SLO counters) replaces it
+ServeReport = ServingReport
 
 
-@dataclass
-class ServeReport:
-    requests: int = 0
-    tokens_out: int = 0
-    faults_injected: int = 0
-    faults_detected: int = 0
-    faults_recovered: int = 0
-    replay_tokens: int = 0
-    decode_ms: List[float] = field(default_factory=list)
-    recovery_ms: List[float] = field(default_factory=list)
-
-    def summary(self) -> Dict:
-        return {
-            "requests": self.requests,
-            "tokens_out": self.tokens_out,
-            "faults": {"injected": self.faults_injected,
-                       "detected": self.faults_detected,
-                       "recovered": self.faults_recovered},
-            "mean_decode_ms": float(np.mean(self.decode_ms))
-            if self.decode_ms else 0.0,
-            "mean_recovery_ms": float(np.mean(self.recovery_ms))
-            if self.recovery_ms else 0.0,
-            "replay_tokens": self.replay_tokens,
-        }
+def make_requests(cfg, n_requests: int, prompt_len: int, gen_tokens: int,
+                  nprng, arrivals=None):
+    """Synthetic request batch: random prompts, optional open-loop
+    arrival times (default: all at t=0, the closed-batch setting)."""
+    vocab = cfg.model.vocab_size
+    reqs = []
+    for i in range(n_requests):
+        reqs.append(Request(
+            rid=i,
+            prompt=nprng.integers(0, vocab, size=prompt_len).astype(np.int32),
+            max_new_tokens=gen_tokens,
+            arrival_s=float(arrivals[i]) if arrivals is not None else 0.0))
+    return reqs
 
 
 def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
           seed: int = 0, inject_every: int = 0, verbose: bool = True,
           canary_slices: int = 4, donate: bool = False,
-          fused_detect: bool = False, mesh: Optional[str] = None) -> Dict:
-    """Recovery-wrapped batched serving.  Detection: free trap (non-finite
-    logits) + a rotating checksum canary over the decode cache —
-    bit-flips in a KV cache rarely drive logits non-finite (RMSNorm masks
-    magnitudes; see EXPERIMENTS.md), so the canary carries detection here
-    exactly as in training.
+          fused_detect: bool = False, mesh=None, n_slots: int = 0):
+    """Serve ``n_requests`` random prompts through the continuous-batching
+    engine; returns the engine summary dict.
 
-    ``donate=True`` jits the decode step with ``donate_argnums`` on the
-    cache — the production in-place KV-update setting.  The canary then
-    runs just before the decode consumes the cache (its last readable
-    moment); prefix replay never needs the donated buffer, so recovery is
-    unchanged.
+    ``inject_every`` > 0 flips one bit in a (preferably active) slot's
+    decode state every N accepted tokens, targeted into the canary's
+    protected window (see ``ServingEngine.corrupt_slot``) so the recovery
+    path — slot eviction + prefix replay — is what gets exercised.
+    ``fused_detect`` is accepted for CLI compatibility: the engine step is
+    always in-step fused.
+    """
+    del fused_detect  # engine detection is always in-step fused
+    # one seed, every RNG: stdlib `random` (injection storm), numpy
+    # (prompts), and the JAX param key (engine init) — plus the global
+    # singletons, so user code downstream of serve() is reproducible too
+    random.seed(seed)
+    np.random.seed(seed % 2**32)
+    rng = random.Random(seed)
+    nprng = np.random.default_rng(seed)
 
-    ``fused_detect=True`` runs the canary INSIDE the jitted decode step
-    (``ChecksumCanary.fuse_into_step``): the check of the input cache's
-    slice ``t % K`` and the arm of the updated cache's next slice ride the
-    decode's own launch — 1 combined launch + 1 scalar sync per token,
-    donated or not, at the cost of K rotation-specialised decode
-    compilations.
+    ctx = None
+    if mesh:
+        from repro.launch.mesh import make_context
+        ctx = make_context(mesh)
 
-    ``mesh="dp,tp"`` serves off a device mesh (DESIGN.md §5): params and
-    decode cache shard per ``distributed/sharding.py``, the cache canary
-    goes shard-local (per-device digests, all-reduced fault flag), and
-    prefix replay rebuilds the sharded cache in place."""
-    from repro.core import ChecksumCanary
-
-    m = cfg.model
-    model = get_model(m)
-    key = jax.random.PRNGKey(seed)
-    params = model.init(m, key)
-    pipe = TokenPipeline(m.vocab_size, prompt_len, n_requests, seed=seed)
-    ctx = make_context(mesh)
-
-    batch = pipe.batch_at(0)
-    if m.n_enc_layers:
-        batch = pipe.with_src_embeds(batch, 32, m.frontend_dim, 0)
-    if m.patch_dim:
-        batch = pipe.with_patches(batch, 8, m.patch_dim, 0)
-
-    cache_sh = None
-    if ctx is not None:
-        from repro.launch.specs import batch_shardings, param_shardings
-        psh, _ = param_shardings(ctx, cfg, params)
-        params = jax.device_put(params, psh)
-        bsh, _ = batch_shardings(ctx, batch)
-        batch = jax.device_put(batch, bsh)
-
-    max_len = prompt_len + gen_tokens + 8
-    prefill = jax.jit(lambda p, b: model.prefill(p, m, b, None,
-                                                 max_len=max_len))
-
-    def raw_decode_fn(p, c, t):
-        lg, nc = model.decode_step(p, m, c, t, None)
-        if cache_sh is not None:
-            # mesh: pin the updated cache to the canonical layout — the
-            # per-token invariant the shard-local canary plans against
-            nc = jax.tree_util.tree_map(
-                jax.lax.with_sharding_constraint, nc, cache_sh)
-        return lg, nc
-
-    decode = jax.jit(raw_decode_fn, donate_argnums=(1,) if donate else ())
-
-    rng = random.Random(seed + 3)
-    rep = ServeReport(requests=n_requests)
-
-    logits, cache = prefill(params, batch)
-    if ctx is not None:
-        from repro.launch.specs import cache_shardings
-        cache_sh, _ = cache_shardings(ctx, cache)
-        cache = jax.device_put(cache, cache_sh)
-    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    # The decode-INPUT log — the replay source.  inputs[0] is the prefill's
-    # token; each accepted decode appends its output (the next input).
-    # (An earlier version logged outputs only and replayed one token off —
-    # the cache canary caught the bit-level divergence immediately.)
-    inputs: List[np.ndarray] = [np.asarray(token)]
-    canary = ChecksumCanary({"cache": cache}, n_slices=canary_slices,
-                            ctx=ctx) \
-        if canary_slices else None
-    fused = None
-    if fused_detect:
-        if canary is None:
-            raise ValueError("fused_detect requires canary_slices > 0")
-
-        def raw_decode(ctree, p, tok):
-            lg, nc = raw_decode_fn(p, ctree["cache"], tok)
-            return {"cache": nc}, lg
-
-        # the factory jits decode + canary together; the plain jitted
-        # `decode` above still serves prefix replay on the fault path.
-        # Warm all K rotation executables BEFORE the timed loop so the
-        # first token's decode_ms doesn't absorb the compilations.
-        fused = canary.fuse_into_step(raw_decode, donate=donate,
-                                      warm="eager")
-        fused.warm({"cache": cache}, params, token)
-
-    t = 0
-    last_inject = -1
-    while t < gen_tokens:
-        if donate and canary and fused is None:
-            # donated decode, arm half: digest slice t%K of the cache the
-            # previous decode just produced (one launch, no sync); the
-            # check below verifies the same slice of the same version
-            canary.arm_current(t, {"cache": cache})
-
-        # adversary: corrupt the cache mid-decode (evaluation only; once
-        # per position — a recovery retry must not be re-hit)
-        if inject_every and t and t % inject_every == 0 and last_inject != t:
-            plan = sample_plan(rng, {"cache": cache}, max_step=1,
-                               target="cache")
-            cache = inject({"cache": cache}, plan)["cache"]
-            rep.faults_injected += 1
-            last_inject = t
-
-        report = None
-        if donate and canary and fused is None:
-            # donated decode, check half: the cache's last readable moment
-            # is BEFORE the step consumes it — one launch + one scalar
-            # sync verifies slice t%K against the arm at the loop top
-            report = canary.check(t, {"cache": cache})
-
-        if report is None:
-            t0 = time.perf_counter()
-            if fused is not None:
-                # in-step fused canary: cache check + next-slice arm ride
-                # the decode's own launch (1 launch + 1 scalar sync/token)
-                ctree, logits, report = fused.step(
-                    t, {"cache": cache}, params, token)
-                new_cache = ctree["cache"]
-            else:
-                logits, new_cache = decode(params, cache, token)
-            jax.block_until_ready(logits)
-            rep.decode_ms.append(1e3 * (time.perf_counter() - t0))
-
-            if canary and not donate and fused is None:
-                # fused rotating canary — one launch + one scalar sync per
-                # token: verify slice t%K of the cache the decode just
-                # consumed, arm slice (t+1)%K of the fresh cache
-                report = canary.check_and_arm(t, {"cache": cache},
-                                              {"cache": new_cache})
-
-        ok = report is None and bool(jnp.isfinite(logits).all())
-        if ok:
-            cache = new_cache
-            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            inputs.append(np.asarray(token))
-            rep.tokens_out += n_requests
-            t += 1
-            continue
-
-        # ---------------- recovery: prefix replay ------------------------
-        rep.faults_detected += 1
-        detector = report.detector if report is not None else "nonfinite"
-        if verbose:
-            print(f"[serve] FAULT at token {t} ({detector}) — replaying "
-                  f"{len(inputs) - 1}-token prefix")
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, batch)
-        if cache_sh is not None:
-            # rebuild on the mesh: the replayed cache must re-enter the
-            # canonical sharded layout the canary plans against
-            cache = jax.device_put(cache, cache_sh)
-        for prev in inputs[:-1]:
-            _, cache = decode(params, cache, jnp.asarray(prev))
-        token = jnp.asarray(inputs[-1])
-        if canary:
-            canary.refresh({"cache": cache})   # rebuilt cache = new reference
-        rep.replay_tokens += len(inputs) - 1
-        rep.recovery_ms.append(1e3 * (time.perf_counter() - t0))
-        rep.faults_recovered += 1
-
-    return rep.summary()
+    slots = n_slots or min(4, max(1, n_requests))
+    eng = ServingEngine(
+        cfg, n_slots=slots, max_len=prompt_len + gen_tokens + 1,
+        canary_slices=canary_slices, donate=donate, ctx=ctx, seed=seed,
+        # serve() promises every request completes (prefix replay always
+        # works) — the drop bound is an SLO-benchmark knob, not a CLI one
+        max_replays=10**6, verbose=verbose)
+    reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, nprng)
+    eng.warm()
+    rep = eng.run(reqs, inject_every=inject_every, inject_rng=rng)
+    out = rep.summary()
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
 
 
 def main():
@@ -245,30 +105,34 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds random, numpy AND the JAX param key")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="batch slots (0: min(4, requests))")
+    ap.add_argument("--canary-slices", type=int, default=4)
     ap.add_argument("--inject", type=int, default=0,
-                    help="corrupt the cache every N generated tokens")
+                    help="flip one bit in a slot's decode state every N "
+                         "accepted tokens")
     ap.add_argument("--donate", action="store_true",
-                    help="donate the decode cache into the step (in-place "
-                         "KV update); the canary checks pre-decode")
+                    help="donate the slot-major cache into the fused step "
+                         "(in-place KV update)")
     ap.add_argument("--fused-detect", action="store_true",
-                    help="run the cache canary INSIDE the jitted decode "
-                         "(1 combined launch + 1 scalar sync per token)")
+                    help="compat no-op: detection is always in-step fused")
     ap.add_argument("--mesh", default=None,
                     help="serve off a device mesh, e.g. '4,2' (CPU repro: "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
-                         "count=8); params/cache shard, the cache canary "
-                         "goes shard-local")
+                         "count=8); params shard, the slot cache "
+                         "replicates, the canary goes shard-local")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
-                gen_tokens=args.gen, seed=args.seed,
-                inject_every=args.inject, donate=args.donate,
-                fused_detect=args.fused_detect, mesh=args.mesh)
-    print(json.dumps(out, indent=1))
+    serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
+          gen_tokens=args.gen, seed=args.seed, inject_every=args.inject,
+          canary_slices=args.canary_slices, donate=args.donate,
+          fused_detect=args.fused_detect, mesh=args.mesh,
+          n_slots=args.slots)
 
 
 if __name__ == "__main__":

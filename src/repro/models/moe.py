@@ -257,7 +257,7 @@ def _moe_shard_map(p, cfg, xt, ctx):
       rank), d sharded over 'data' for storage; per layer each rank gathers
       only ITS experts over 'data', computes its owned tokens, and partial
       outputs psum over 'model'.  This is the only recipe that fits 1T
-      params on 16 GB/chip (kimi); see DESIGN.md §6.
+      params on 16 GB/chip (kimi); see DESIGN.md §7.
     """
     from jax.sharding import PartitionSpec as P
 

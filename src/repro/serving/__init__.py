@@ -1,0 +1,15 @@
+"""Continuous-batching serving with slot-isolated recovery.
+
+Public surface:
+
+* :class:`~repro.serving.request.Request` / ``RequestQueue`` — the queue
+  front end; a request's accepted-token log is its replay RSI.
+* :class:`~repro.serving.engine.ServingEngine` / ``ServingReport`` — the
+  iteration-level scheduler over slot-major decode state with a per-slot
+  canary slice (1 fused launch + 1 scalar fault sync per engine step).
+"""
+
+from repro.serving.request import Request, RequestQueue
+from repro.serving.engine import ServingEngine, ServingReport
+
+__all__ = ["Request", "RequestQueue", "ServingEngine", "ServingReport"]

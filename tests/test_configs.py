@@ -56,7 +56,7 @@ def test_special_flags():
 
 @pytest.mark.parametrize("arch", sorted(TABLE))
 def test_long500k_rule(arch):
-    """long_500k only for sub-quadratic archs (DESIGN.md §6)."""
+    """long_500k only for sub-quadratic archs (DESIGN.md §8)."""
     cfg = get_config(arch)
     runs = {s.name for s in cfg.shapes()}
     subq = arch in ("xlstm-350m", "h2o-danube-1.8b", "gemma3-1b",

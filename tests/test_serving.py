@@ -1,0 +1,301 @@
+"""Continuous-batching serving engine: slot isolation, slot-scoped
+recovery, and the 1-launch/1-sync/0-retrace hot-path contract.
+
+The load-bearing regressions (ISSUE 6 acceptance):
+
+* a fault injected into ONE slot's decode state leaves every healthy
+  slot's subsequent tokens BIT-IDENTICAL to a fault-free run — only the
+  injured request pays prefix replay;
+* admission/eviction at steady state causes 0 retraces (slot turnover is
+  slice writes through pre-compiled executables, never a recompile);
+* a steady-state engine step is exactly 1 logical launch + 1 scalar
+  fault sync.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.detect import (FaultReport, slot_leaf_prefix, slot_of_leaf,
+                               slot_view)
+from repro.core.recover import plan_serving_recovery
+from repro.kernels import digest as kdigest
+from repro.serving import Request, RequestQueue, ServingEngine
+
+S, MAX_LEN, K = 3, 48, 4   # one engine shape for most tests — the
+# module-level executable caches make every extra engine over it free
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("iterpro-100m").smoke()
+
+
+def mk_requests(cfg, n, gen=8, plen=6, seed=0, arrivals=None):
+    nprng = np.random.default_rng(seed)
+    return [Request(
+        rid=i,
+        prompt=nprng.integers(0, cfg.model.vocab_size,
+                              size=plen).astype(np.int32),
+        max_new_tokens=gen,
+        arrival_s=float(arrivals[i]) if arrivals is not None else 0.0)
+        for i in range(n)]
+
+
+def mk_engine(cfg, **kw):
+    kw.setdefault("n_slots", S)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("canary_slices", K)
+    kw.setdefault("donate", True)
+    return ServingEngine(cfg, **kw)
+
+
+# -- request / queue front end ------------------------------------------
+
+
+def test_request_log_and_retract():
+    rq = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=5)
+    rq.log = [7, 1, 2, 3]
+    assert rq.n_out == 3 and not rq.done
+    assert rq.retract(2) == 2
+    assert rq.log == [7, 1] and rq.retracted == 2
+    assert rq.retract(9) == 1          # never touches log[0]
+    assert rq.log == [7]
+    assert rq.retract(1) == 0
+
+
+def test_queue_order_and_front_requeue():
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new_tokens=1,
+                    arrival_s=t) for i, t in enumerate([0.3, 0.1, 0.2])]
+    q = RequestQueue(reqs)
+    assert q.pop_ready(0.0) is None            # nothing has arrived yet
+    evicted = q.pop_ready(1.0)
+    assert evicted.rid == 1
+    q.requeue_front(evicted)                   # jumps ahead of rid=2
+    assert q.pop_ready(1.0).rid == 1
+    assert q.pop_ready(1.0).rid == 2
+    assert q.pop_ready(1.0).rid == 0
+    assert q.next_arrival() is None
+
+
+# -- slot-view canary mapping (core/detect.py) --------------------------
+
+
+def test_slot_view_mapping_roundtrip():
+    tree = {"k": np.arange(12.0).reshape(3, 4), "pos": np.arange(3)}
+    view = slot_view(tree, 3)
+    assert sorted(view) == [slot_leaf_prefix(u) for u in range(3)]
+    assert np.array_equal(view[slot_leaf_prefix(1)]["k"], tree["k"][1])
+    assert slot_of_leaf("slot002/groups/0/0/k") == 2
+    assert slot_of_leaf("params/w") is None
+
+
+def test_fault_report_injured_slots():
+    rep = FaultReport(0, "checksum",
+                      leaves=["slot001/k", "slot001/pos", "slot000/k", "x"])
+    assert rep.injured_slots() == [0, 1]
+
+
+# -- recovery policy (core/recover.py) ----------------------------------
+
+
+def test_plan_serving_recovery_checksum_zero_retract():
+    rep = FaultReport(3, "checksum", leaves=["slot002/k"])
+    plan = plan_serving_recovery(rep, n_slices=4)
+    assert plan.scope == "slots" and plan.slots == [2]
+    # one-step detection latency: no ACCEPTED token is suspect
+    assert plan.retract == 0
+
+
+def test_plan_serving_recovery_nonfinite_window():
+    plan = plan_serving_recovery(None, n_slices=4, nonfinite_slots=[1])
+    assert plan.scope == "slots" and plan.slots == [1]
+    assert plan.retract == 3           # K-1 at-rest window
+    plan0 = plan_serving_recovery(None, n_slices=0, nonfinite_slots=[1])
+    assert plan0.retract is None       # no canary: no bound, full replay
+
+
+def test_plan_serving_recovery_no_attribution_evicts_engine():
+    rep = FaultReport(3, "external")
+    plan = plan_serving_recovery(rep, n_slices=4)
+    assert plan.scope == "engine" and plan.retract is None
+
+
+# -- engine: continuous batching ----------------------------------------
+
+
+def test_continuous_batching_all_complete(cfg):
+    eng = mk_engine(cfg)
+    # 2x oversubscribed with staggered arrivals: freed slots must be
+    # re-filled mid-flight (iteration-level scheduling)
+    n = 2 * S
+    reqs = mk_requests(cfg, n, gen=6, arrivals=np.linspace(0, 0.05, n))
+    rep = eng.run(reqs)
+    assert rep.completed == n and rep.dropped == 0
+    assert rep.tokens_out == n * 6
+    assert rep.admissions == n
+    for r in rep.per_request.values():
+        assert len(r["tokens"]) == 6 and not r["dropped"]
+
+
+def test_lane_outputs_independent_of_slot_and_batchmates(cfg):
+    """The same request produces the same tokens whatever slot it lands
+    in and whoever shares the batch — the determinism slot-isolated
+    recovery is built on."""
+    reqs_a = mk_requests(cfg, 4, gen=6)
+    solo = {}
+    for rq in mk_requests(cfg, 4, gen=6):
+        eng = mk_engine(cfg)
+        out = eng.run([rq])
+        solo[rq.rid] = out.per_request[rq.rid]["tokens"]
+    eng = mk_engine(cfg)
+    rep = eng.run(reqs_a)
+    for rid, toks in solo.items():
+        assert rep.per_request[rid]["tokens"] == toks
+
+
+# -- engine: fault storm, slot isolation, recovery ----------------------
+
+
+def run_pair(cfg, n=6, gen=8, inject_every=5, seed=0, **kw):
+    base = mk_engine(cfg, **kw)
+    base_rep = base.run(mk_requests(cfg, n, gen=gen))
+    storm = mk_engine(cfg, **kw)
+    storm_rep = storm.run(mk_requests(cfg, n, gen=gen),
+                          inject_every=inject_every,
+                          inject_rng=random.Random(seed))
+    return base_rep, storm_rep
+
+
+def test_fault_storm_detects_recovers_and_isolates(cfg):
+    base_rep, storm_rep = run_pair(cfg)
+    f = storm_rep.summary()["faults"]
+    assert f["injected"] >= 2
+    # armed-window storm: every flip lands in the protected slice
+    assert f["detected"] == f["injected"]
+    assert f["recovered"] == f["detected"]
+    assert storm_rep.dropped == 0
+    assert storm_rep.replay_tokens > 0
+    assert storm_rep.injured_rids
+    # THE isolation regression: healthy requests bit-identical...
+    for rid, rec in base_rep.per_request.items():
+        if rid not in storm_rep.injured_rids:
+            assert storm_rep.per_request[rid]["tokens"] == rec["tokens"]
+            assert storm_rep.per_request[rid]["replays"] == 0
+    # ...and only injured requests paid prefix replay
+    replayed = {rid for rid, r in storm_rep.per_request.items()
+                if r["replays"]}
+    assert replayed <= storm_rep.injured_rids
+    # replay determinism: injured requests are ALSO bit-identical
+    for rid in storm_rep.injured_rids:
+        assert (storm_rep.per_request[rid]["tokens"]
+                == base_rep.per_request[rid]["tokens"])
+
+
+def test_targeted_fault_names_its_slot(cfg):
+    eng = mk_engine(cfg)
+    reqs = mk_requests(cfg, S, gen=32)
+    for u, rq in enumerate(reqs):
+        eng.admit(rq, u)
+    for _ in range(K):
+        eng.engine_step()
+    victim = 1
+    u, key, _ = eng.corrupt_slot(random.Random(0), slot=victim,
+                                 armed_only=True)
+    assert u == victim
+    _, finite, report = eng.engine_step()
+    assert report is not None
+    assert report.injured_slots() == [victim]
+    q = RequestQueue()
+    evicted = eng.handle_fault(report, finite, 0.0, q)
+    assert evicted == [victim]
+    assert eng.slot_rid[victim] is None          # victim evicted...
+    assert len(q) == 1 and q.pop_ready(0.0).rid == reqs[victim].rid
+    others = [eng.slot_rid[i] for i in range(S) if i != victim]
+    assert all(r is not None for r in others)    # ...healthy slots live
+    # healthy lanes keep decoding the very next engine step, no refire
+    _, _, rep2 = eng.engine_step()
+    assert rep2 is None
+
+
+def test_k1_canary_catches_every_flip(cfg):
+    _, storm_rep = run_pair(cfg, inject_every=4, canary_slices=1)
+    f = storm_rep.summary()["faults"]
+    assert f["injected"] >= 2
+    assert f["detected"] == f["injected"]
+    assert f["recovered"] == f["detected"]
+
+
+# -- engine: hot-path contract ------------------------------------------
+
+
+def test_steady_state_one_launch_one_sync_zero_retraces(cfg):
+    eng = mk_engine(cfg)
+    eng.warm()
+    for u, rq in enumerate(mk_requests(cfg, S, gen=10**6)):
+        eng.admit(rq, u)
+    for _ in range(K):                 # settle one full rotation
+        assert eng.engine_step()[2] is None
+    kdigest.STATS.reset()
+    W = 8
+    for _ in range(W):
+        assert eng.engine_step()[2] is None
+    launches, syncs, traces = kdigest.STATS.snapshot()
+    assert (launches, syncs, traces) == (W, W, 0), (
+        "steady-state engine step must be 1 logical launch + 1 scalar "
+        f"fault sync + 0 retraces, got {launches}/{syncs}/{traces} over "
+        f"{W} steps")
+
+
+def test_admission_and_eviction_zero_retraces(cfg):
+    eng = mk_engine(cfg)
+    eng.warm()
+    reqs = mk_requests(cfg, 2 * S, gen=10**6, seed=3)
+    for u in range(S):
+        eng.admit(reqs[u], u)
+    for _ in range(K):
+        eng.engine_step()
+    kdigest.STATS.reset()
+    # churn every slot once: evict + admit + step — all slice writes
+    for u in range(S):
+        eng._free(u)
+        eng.admit(reqs[S + u], u)
+        eng.engine_step()
+    assert kdigest.STATS.traces == 0, (
+        f"slot churn retraced {kdigest.STATS.traces} digest fns")
+
+
+def test_storm_run_zero_retraces_after_preflight(cfg):
+    # a full run (admissions, faults, evictions, replays) after one
+    # preflight run must not retrace anything
+    pre = mk_engine(cfg)
+    pre.warm()
+    pre.run(mk_requests(cfg, 2 * S, gen=4), inject_every=2,
+            inject_rng=random.Random(1))
+    kdigest.STATS.reset()
+    eng = mk_engine(cfg)
+    rep = eng.run(mk_requests(cfg, 2 * S, gen=6), inject_every=4,
+                  inject_rng=random.Random(0))
+    assert rep.completed == 2 * S
+    assert kdigest.STATS.traces == 0
+
+
+# -- serve() CLI wrapper ------------------------------------------------
+
+
+def test_serve_summary_has_percentiles_and_is_seeded(cfg):
+    from repro.launch.serve import serve
+    out = serve(cfg, n_requests=2, prompt_len=8, gen_tokens=4, seed=7,
+                inject_every=3, verbose=False)
+    for k in ("p50_decode_ms", "p99_decode_ms", "p50_recovery_ms",
+              "p99_recovery_ms", "mean_decode_ms", "mean_recovery_ms"):
+        assert k in out
+    assert out["tokens_out"] == 2 * 4
+    # full-stack reproducibility: same seed => same counters
+    out2 = serve(cfg, n_requests=2, prompt_len=8, gen_tokens=4, seed=7,
+                 inject_every=3, verbose=False)
+    for k in ("tokens_out", "faults", "replay_tokens",
+              "retracted_tokens", "engine_steps", "admissions"):
+        assert out[k] == out2[k], k
