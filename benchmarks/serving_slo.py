@@ -28,8 +28,18 @@ just reported:
   reported.)
 * **steady-state hot path**: at full slots with no admissions, an engine
   step is EXACTLY 1 logical launch + 1 scalar fault sync with 0 digest
-  retraces, and admission/eviction at steady state causes 0 retraces
-  (slot slice writes, not recompiles).
+  retraces, and admission/eviction at steady state causes 0 retraces —
+  including paged block-pool alloc/free churn across DIFFERENT prompt
+  lengths (slice writes through pre-compiled executables, never a
+  recompile).
+
+With ``--prefill-chunk`` > 0 a third, fault-free pair of runs compares
+chunked against monolithic prefill on the same heterogeneous schedule
+(``--long-prompt``/``--long-every`` mix a long-prompt tail into the
+arrivals): chunked prefill must not change a single output token
+(asserted) and must keep short requests' e2e p99 within a loose bound of
+the monolithic run's (a long prompt's prefill no longer stalls the
+decode batch wholesale).
 
 ``--out`` writes machine-readable ``BENCH_serving.json`` (QPS, tokens/s,
 p99 added latency, dropped counts) so the serving perf trajectory is
@@ -61,36 +71,52 @@ def _pct(xs: List[float], q: float) -> float:
 
 
 def _make_requests(cfg, n: int, prompt_len: int, gen_tokens: int,
-                   qps: float, nprng) -> List[Request]:
+                   qps: float, nprng, long_prompt: int = 0,
+                   long_every: int = 0) -> List[Request]:
     """Open-loop arrivals: exponential inter-arrival times at ``qps``
-    (Poisson process), seeded — both runs see the SAME schedule."""
+    (Poisson process), seeded — both runs see the SAME schedule.
+    ``long_prompt``/``long_every`` mix in a heterogeneous tail: every
+    ``long_every``-th request carries a ``long_prompt``-token prompt (the
+    paged pool's block-budget admission and the chunked-prefill fairness
+    section both need the mix)."""
     arrivals = np.cumsum(nprng.exponential(1.0 / qps, size=n))
     vocab = cfg.model.vocab_size
-    return [Request(
-        rid=i,
-        prompt=nprng.integers(0, vocab, size=prompt_len).astype(np.int32),
-        max_new_tokens=gen_tokens,
-        arrival_s=float(arrivals[i])) for i in range(n)]
+    reqs = []
+    for i in range(n):
+        plen = (long_prompt if long_every and long_prompt
+                and i % long_every == long_every - 1 else prompt_len)
+        reqs.append(Request(
+            rid=i,
+            prompt=nprng.integers(0, vocab, size=plen).astype(np.int32),
+            max_new_tokens=gen_tokens,
+            arrival_s=float(arrivals[i])))
+    return reqs
 
 
 def steady_state(cfg, *, n_slots: int = 4, canary_slices: int = 4,
-                 steps: int = 16, seed: int = 0) -> Dict:
+                 steps: int = 16, seed: int = 0, paged=None,
+                 block_size: int = 8, prefill_chunk: int = 0) -> Dict:
     """Hard-assert the engine's hot-path contract (the serving analogue of
     overhead.fused_steady_state):
 
     * full slots, no admissions: 1 logical launch + 1 scalar sync + 0
       retraces per engine step;
     * an eviction + admission at steady state retraces NOTHING — slot
-      turnover is slice writes through pre-compiled executables.
+      turnover is slice writes through pre-compiled executables, and
+      under paging the re-admission uses a DIFFERENT prompt length
+      (different block count), so block-pool alloc/free churn is part of
+      the asserted contract.
     """
     nprng = np.random.default_rng(seed)
     eng = ServingEngine(cfg, n_slots=n_slots, max_len=64,
-                        canary_slices=canary_slices, donate=True, seed=seed)
+                        canary_slices=canary_slices, donate=True, seed=seed,
+                        paged=paged, block_size=block_size,
+                        prefill_chunk=prefill_chunk)
     warm_s = eng.warm()
     vocab = cfg.model.vocab_size
-    mk = lambda rid: Request(
-        rid=rid, prompt=nprng.integers(0, vocab, size=8).astype(np.int32),
-        max_new_tokens=10**6)          # never completes inside the window
+    mk = lambda rid, plen=8: Request(
+        rid=rid, prompt=nprng.integers(0, vocab, size=plen).astype(np.int32),
+        max_new_tokens=eng.max_len - plen - 1)   # outlives the window
     for u in range(n_slots):
         eng.admit(mk(u), u)
     for _ in range(max(1, canary_slices)):   # settle one full rotation
@@ -106,16 +132,18 @@ def steady_state(cfg, *, n_slots: int = 4, canary_slices: int = 4,
         f"sync + 0 retraces per engine step, got {launches}/{syncs}/"
         f"{traces} over {steps} steps")
 
-    # slot turnover at steady state: evict + admit, then step — 0 retraces
+    # slot turnover at steady state: evict + admit a LONGER prompt
+    # (different block count under paging), then step — 0 retraces
     eng._free(1)
     kdigest.STATS.reset()
-    eng.admit(mk(n_slots + 1), 1)
+    eng.admit(mk(n_slots + 1, plen=29), 1)
     for _ in range(max(1, canary_slices)):
         eng.engine_step()
     _, _, tr = kdigest.STATS.snapshot()
     assert tr == 0, f"slot admission retraced ({tr} digest retraces)"
     return {
         "steps": steps,
+        "paged": eng.paged,
         "warmup_wall_s": warm_s,
         "launches_per_step": launches / steps,
         "syncs_per_step": syncs / steps,
@@ -128,7 +156,9 @@ def run(*, arch: str = "iterpro-100m", smoke: bool = True,
         n_requests: int = 24, qps: float = 8.0, prompt_len: int = 12,
         gen_tokens: int = 16, n_slots: int = 4, canary_slices: int = 4,
         inject_every: int = 8, seed: int = 0, donate: bool = True,
-        mesh: Optional[str] = None) -> Dict:
+        mesh: Optional[str] = None, paged=None, block_size: int = 8,
+        prefill_chunk: int = 0, long_prompt: int = 0,
+        long_every: int = 0) -> Dict:
     """Target QPS should sit BELOW the engine's capacity (smoke on CPU:
     ~4 slots x ~250 tokens/s / 16 tokens ≈ 15-60 req/s) — an overloaded
     open-loop queue measures backlog growth, not fault cost."""
@@ -140,35 +170,39 @@ def run(*, arch: str = "iterpro-100m", smoke: bool = True,
         from repro.launch.mesh import make_context
         ctx = make_context(mesh)
 
-    max_len = prompt_len + gen_tokens + 1
-    mk_engine = lambda: ServingEngine(
+    max_len = max(prompt_len, long_prompt) + gen_tokens + 1
+    mk_engine = lambda **kw: ServingEngine(
         cfg, n_slots=n_slots, max_len=max_len, canary_slices=canary_slices,
-        donate=donate, ctx=ctx, seed=seed)
+        donate=donate, ctx=ctx, seed=seed, paged=paged,
+        block_size=block_size,
+        prefill_chunk=kw.pop("prefill_chunk", prefill_chunk))
+    mk_reqs = lambda rng_seed, n=n_requests, q=qps: _make_requests(
+        cfg, n, prompt_len, gen_tokens, q, np.random.default_rng(rng_seed),
+        long_prompt=long_prompt, long_every=long_every)
 
     # preflight: compile EVERYTHING off the clock — step executables
-    # (warm), prefill/admit (first admissions), and the fault path's
-    # per-slot refresh digests (a mini-storm).  All caches are shared at
-    # module/plan level, so the timed engines below start fully hot.
+    # (warm), prefill/admit (first admissions — including a long-prompt
+    # one, which traces nothing new but pays XLA autotuning), and the
+    # fault path's per-block refresh digests (a mini-storm).  All caches
+    # are shared at module/plan level, so the timed engines below start
+    # fully hot.
     pre = mk_engine()
     pre.warm()
-    pre.run(_make_requests(cfg, 2 * n_slots, prompt_len, 4, 1e9,
-                           np.random.default_rng(seed + 1)),
+    pre.run(mk_reqs(seed + 1, n=2 * n_slots, q=1e9),
             inject_every=2, inject_rng=random.Random(seed + 1))
 
     # baseline: same schedule, no storm.  Both engines share the global
     # executable cache (same plan/K/S/signature), so only the first warm
     # pays compilation.
     base = mk_engine()
-    base_reqs = _make_requests(cfg, n_requests, prompt_len, gen_tokens,
-                               qps, np.random.default_rng(seed))
+    base_reqs = mk_reqs(seed)
     base.warm()
     t0 = time.perf_counter()
     base_rep = base.run(base_reqs)
     base_wall = time.perf_counter() - t0
 
     storm = mk_engine()
-    storm_reqs = _make_requests(cfg, n_requests, prompt_len, gen_tokens,
-                                qps, np.random.default_rng(seed))
+    storm_reqs = mk_reqs(seed)
     storm.warm()
     t0 = time.perf_counter()
     storm_rep = storm.run(storm_reqs, inject_every=inject_every,
@@ -213,7 +247,51 @@ def run(*, arch: str = "iterpro-100m", smoke: bool = True,
     added_injured = added(sorted(injured))
     rec = storm_rep.recovery_ms
     ss = steady_state(cfg, n_slots=n_slots, canary_slices=canary_slices,
-                      seed=seed)
+                      seed=seed, paged=paged, block_size=block_size)
+
+    # --- chunked-prefill fairness: same schedule, fault-free, monolithic
+    # vs chunked; the claim is that chunking BOUNDS what a long prompt's
+    # prefill adds to short requests' latency.  Measured loosely (wall
+    # clock on shared CI hardware) but token equality and completion are
+    # exact asserts.
+    fairness = None
+    if prefill_chunk > 0 and base.paged:
+        # monolithic preflight: the chunked preflight above never compiled
+        # the per-prompt-length monolithic prefill executables — pay them
+        # off the clock so the comparison is prefill POLICY, not compiles
+        pre_m = mk_engine(prefill_chunk=0)
+        pre_m.warm()
+        pre_m.run(mk_reqs(seed + 2, n=2 * n_slots, q=1e9))
+        mono = mk_engine(prefill_chunk=0)
+        mono_reqs = mk_reqs(seed)
+        mono.warm()
+        t0 = time.perf_counter()
+        mono_rep = mono.run(mono_reqs)
+        mono_wall = time.perf_counter() - t0
+        assert mono_rep.completed == n_requests and mono_rep.dropped == 0
+        assert base_rep.completed == n_requests and base_rep.dropped == 0
+        toks = lambda rep: {rid: r["tokens"]
+                            for rid, r in rep.per_request.items()}
+        assert toks(mono_rep) == toks(base_rep), (
+            "chunked prefill changed output tokens vs monolithic")
+        short = [r.rid for r in mono_reqs if len(r.prompt) <= prompt_len]
+        e2e = lambda rep: [1e3 * rep.per_request[rid]["e2e_s"]
+                           for rid in short]
+        mono_p99, chunk_p99 = _pct(e2e(mono_rep), 99), _pct(e2e(base_rep),
+                                                            99)
+        assert chunk_p99 <= mono_p99 * 2.0 + 100.0, (
+            f"chunked prefill made short requests WORSE: p99 "
+            f"{chunk_p99:.1f} ms vs monolithic {mono_p99:.1f} ms")
+        fairness = {
+            "prefill_chunk": prefill_chunk,
+            "short_requests": len(short),
+            "short_p99_ms_monolithic": mono_p99,
+            "short_p99_ms_chunked": chunk_p99,
+            "short_p50_ms_monolithic": _pct(e2e(mono_rep), 50),
+            "short_p50_ms_chunked": _pct(e2e(base_rep), 50),
+            "wall_s_monolithic": mono_wall,
+            "tokens_bit_identical": True,           # asserted above
+        }
 
     out = {
         "config": {"arch": arch, "smoke": smoke, "n_requests": n_requests,
@@ -221,7 +299,10 @@ def run(*, arch: str = "iterpro-100m", smoke: bool = True,
                    "gen_tokens": gen_tokens, "n_slots": n_slots,
                    "canary_slices": canary_slices,
                    "inject_every_tokens": inject_every, "seed": seed,
-                   "donate": donate, "mesh": mesh},
+                   "donate": donate, "mesh": mesh,
+                   "paged": base.paged, "block_size": block_size,
+                   "prefill_chunk": prefill_chunk,
+                   "long_prompt": long_prompt, "long_every": long_every},
         "baseline": {"wall_s": base_wall,
                      "tokens_per_s": base_rep.tokens_out / base_wall,
                      "qps_achieved": base_rep.completed / base_wall},
@@ -251,7 +332,9 @@ def run(*, arch: str = "iterpro-100m", smoke: bool = True,
                         "p50": _pct(rec, 50), "p99": _pct(rec, 99)},
         "replay_tokens": storm_rep.replay_tokens,
         "retracted_tokens": storm_rep.retracted_tokens,
+        "admission_rejected": storm_rep.admission_rejected,
         "steady_state": ss,
+        "chunked_prefill": fairness,
     }
     return out
 
@@ -275,6 +358,12 @@ def bench_record(out: Dict) -> Dict:
             out["steady_state"]["launches_per_step"],
         "steady_state_syncs_per_step":
             out["steady_state"]["syncs_per_step"],
+        "paged": out["config"]["paged"],
+        **({"short_p99_ms_monolithic":
+                out["chunked_prefill"]["short_p99_ms_monolithic"],
+            "short_p99_ms_chunked":
+                out["chunked_prefill"]["short_p99_ms_chunked"]}
+           if out.get("chunked_prefill") else {}),
     }
 
 
@@ -328,11 +417,25 @@ def render(out: Dict) -> str:
         f"p50 {rc['p50']:.1f} ms, p99 {rc['p99']:.1f} ms over {rc['n']} "
         f"evictions (detection -> victim re-admitted)")
     lines.append(
-        f"- steady-state hot path (asserted): "
+        f"- steady-state hot path (asserted, "
+        f"{'paged' if ss.get('paged') else 'dense'} KV): "
         f"{ss['launches_per_step']:g} logical launch + "
         f"{ss['syncs_per_step']:g} scalar fault sync + "
         f"{ss['retraces_per_step']:g} retraces per engine step; slot "
-        f"turnover retraced {ss['admit_retraces']} times")
+        f"turnover (incl. block churn) retraced "
+        f"{ss['admit_retraces']} times")
+    fz = out.get("chunked_prefill")
+    if fz:
+        lines.append(
+            f"- chunked prefill (chunk={fz['prefill_chunk']}, long-prompt "
+            f"mix, fault-free, tokens bit-identical asserted): short-"
+            f"request e2e p99 {fz['short_p99_ms_chunked']:.1f} ms chunked "
+            f"vs {fz['short_p99_ms_monolithic']:.1f} ms monolithic "
+            f"({fz['short_requests']} short requests)")
+    if out.get("admission_rejected"):
+        lines.append(
+            f"- admission rejected (over-budget, typed): "
+            f"{out['admission_rejected']}")
     return "\n".join(lines)
 
 
@@ -350,6 +453,17 @@ def main():
                     help="one bit flip per N accepted tokens")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged-KV block size (token positions)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size (0: monolithic); >0 also "
+                         "runs the chunked-vs-monolithic fairness section")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot KV cache")
+    ap.add_argument("--long-prompt", type=int, default=0,
+                    help="heterogeneous mix: every Nth request (see "
+                         "--long-every) carries a prompt this long")
+    ap.add_argument("--long-every", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="path for BENCH_serving.json ('' to skip)")
     args = ap.parse_args()
@@ -358,7 +472,10 @@ def main():
               qps=args.qps, prompt_len=args.prompt_len,
               gen_tokens=args.gen, n_slots=args.slots,
               canary_slices=args.canary_slices, inject_every=args.inject,
-              seed=args.seed, mesh=args.mesh)
+              seed=args.seed, mesh=args.mesh,
+              paged=False if args.dense else None,
+              block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+              long_prompt=args.long_prompt, long_every=args.long_every)
     print(render(out))
     if args.out:
         path = write_bench(out, args.out)

@@ -70,6 +70,11 @@ LOSS_WINDOW = 8
 
 _SLOT_RE = re.compile(r"^slot(\d+)/")
 
+#: Paged serving (DESIGN.md §6): pool leaves live under ``blockNNNN/``
+#: view keys; after ownership translation an owned block's path becomes
+#: ``slotNNN/blockNNNN/<leaf>`` — matched mid-path, hence ``(?:^|/)``.
+_BLOCK_RE = re.compile(r"(?:^|/)block(\d+)/")
+
 
 def slot_leaf_prefix(slot: int) -> str:
     """Canonical view key for one slot (zero-padded so string-sorted plan
@@ -90,6 +95,30 @@ def slot_view(tree, n_slots: int) -> Dict:
 def slot_of_leaf(key: str) -> Optional[int]:
     """Slot id encoded in a slot-view leaf path (None for non-slot keys)."""
     m = _SLOT_RE.match(key)
+    return int(m.group(1)) if m else None
+
+
+def block_leaf_prefix(block: int) -> str:
+    """Canonical view key for one pool block (paged serving engine)."""
+    return f"block{block:04d}"
+
+
+def block_view(pool, n_blocks: int) -> Dict:
+    """Per-block view of a block-major KV pool (every leaf
+    ``[block, block_size, ...]``).  The digest-plan keys become
+    ``blockNNNN/<leaf path>`` — (leaf, block) canary units, so the
+    rotating checksum attributes a fault to a specific *pool block*; the
+    engine's allocator then maps block → owning slot (or to no owner, in
+    which case the fault hit free bytes and nothing needs evicting)."""
+    return {block_leaf_prefix(b): jax.tree_util.tree_map(lambda l: l[b], pool)
+            for b in range(n_blocks)}
+
+
+def block_of_leaf(key: str) -> Optional[int]:
+    """Pool block id encoded in a block-view leaf path (None for
+    non-block keys).  Matches both raw plan keys (``block0007/...``) and
+    ownership-translated report keys (``slot001/block0007/...``)."""
+    m = _BLOCK_RE.search(key)
     return int(m.group(1)) if m else None
 
 
@@ -133,6 +162,12 @@ class FaultReport:
         non-finite flags)."""
         return sorted({s for s in (slot_of_leaf(k) for k in self.resolve())
                        if s is not None})
+
+    def injured_blocks(self) -> List[int]:
+        """Pool block ids named by a block-view canary report (paged
+        serving engine).  Empty for non-paged canaries."""
+        return sorted({b for b in (block_of_leaf(k) for k in self.resolve())
+                       if b is not None})
 
     def __str__(self):
         where = f" leaves={self.leaves[:3]}{'...' if len(self.leaves) > 3 else ''}" \

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.detect import ChecksumCanary, FaultReport
+from repro.core.detect import ChecksumCanary, FaultReport, block_of_leaf
 from repro.core.induction import IVRegistry, RecoveryAbort
 from repro.core.microcheckpoint import MicroCheckpointer
 from repro.core.parity import ParityManager
@@ -469,6 +469,17 @@ def plan_serving_recovery(report: FaultReport, *, n_slices: int,
         return ServingRecoveryPlan(
             scope="slots", slots=sorted(slots), retract=retract,
             reason=f"slot attribution ({report.detector if report else 'nonfinite'})")
+    if report is not None:
+        leaves = report.resolve()
+        if leaves and all(block_of_leaf(k) is not None for k in leaves):
+            # Paged pool: every corrupted leaf is a pool block with no
+            # owning slot — the flip landed on free (or scratch) bytes
+            # that no live sequence reads.  Nothing to evict; the engine
+            # just re-certifies the injured blocks' digests.
+            return ServingRecoveryPlan(
+                scope="slots", slots=[], retract=0,
+                reason="checksum attribution to unowned pool blocks — "
+                       "no live victim")
     return ServingRecoveryPlan(
         scope="engine", slots=[], retract=None,
         reason="no slot attribution — evict all active slots")

@@ -19,7 +19,10 @@ ALWAYS in-step fused (1 launch + 1 scalar fault sync per engine step —
 the ``--fused-detect`` flag of the old fixed-batch driver is accepted
 for compatibility and is a no-op), and ``--mesh`` serves off a device
 mesh with sharded params, a replicated slot-major cache, and a
-shard-local canary.
+shard-local canary.  KV memory is a paged block pool by default where
+the family supports it (``--block-size`` sets the block granularity,
+``--dense`` forces the old per-slot cache), and ``--prefill-chunk``
+prefills long prompts chunk-at-a-time interleaved with decode steps.
 """
 
 from __future__ import annotations
@@ -57,7 +60,8 @@ def make_requests(cfg, n_requests: int, prompt_len: int, gen_tokens: int,
 def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
           seed: int = 0, inject_every: int = 0, verbose: bool = True,
           canary_slices: int = 4, donate: bool = False,
-          fused_detect: bool = False, mesh=None, n_slots: int = 0):
+          fused_detect: bool = False, mesh=None, n_slots: int = 0,
+          paged=None, block_size: int = 8, prefill_chunk: int = 0):
     """Serve ``n_requests`` random prompts through the continuous-batching
     engine; returns the engine summary dict.
 
@@ -88,7 +92,8 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
         canary_slices=canary_slices, donate=donate, ctx=ctx, seed=seed,
         # serve() promises every request completes (prefix replay always
         # works) — the drop bound is an SLO-benchmark knob, not a CLI one
-        max_replays=10**6, verbose=verbose)
+        max_replays=10**6, verbose=verbose, paged=paged,
+        block_size=block_size, prefill_chunk=prefill_chunk)
     reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, nprng)
     eng.warm()
     rep = eng.run(reqs, inject_every=inject_every, inject_rng=rng)
@@ -118,6 +123,15 @@ def main():
                          "(in-place KV update)")
     ap.add_argument("--fused-detect", action="store_true",
                     help="compat no-op: detection is always in-step fused")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged-KV block size in token positions")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill long prompts in chunks of this many "
+                         "tokens, interleaved with decode steps (0: "
+                         "monolithic prefill)")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot KV cache (paged pool "
+                         "is the default where the family supports it)")
     ap.add_argument("--mesh", default=None,
                     help="serve off a device mesh, e.g. '4,2' (CPU repro: "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
@@ -132,7 +146,8 @@ def main():
           gen_tokens=args.gen, seed=args.seed, inject_every=args.inject,
           canary_slices=args.canary_slices, donate=args.donate,
           fused_detect=args.fused_detect, mesh=args.mesh,
-          n_slots=args.slots)
+          n_slots=args.slots, paged=False if args.dense else None,
+          block_size=args.block_size, prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

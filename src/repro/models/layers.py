@@ -362,6 +362,28 @@ def attn_decode(p, cfg, x, pos, k_cache, v_cache, *, window: int = 0,
     return dense(p["wo"], o.reshape(B, 1, -1)), k_cache, v_cache
 
 
+def attn_prefill_chunk(p, cfg, x, qpos, k_ctx, v_ctx, ctx_kpos, *,
+                       window: int = 0, theta: float = 0.0):
+    """Chunked-prefill attention: a span of new tokens attends to an
+    external KV context plus itself, causally.
+
+    x (B,C,d); qpos (B,C) absolute positions of the chunk tokens;
+    k_ctx/v_ctx (B,T,KV,Dh) already-cached context; ctx_kpos (B,T)
+    absolute key positions of the context rows (<0 = unwritten, masked).
+    Linear caches only (windowed/ring layers keep monolithic prefill).
+    Returns (y (B,C,d), k, v) where k/v (B,C,KV,Dh) are the chunk's new
+    cache rows for the caller to store.
+    """
+    B, C = x.shape[:2]
+    q, k, v = attn_qkv(p, cfg, x, qpos, theta=theta)
+    k_all = jnp.concatenate([k_ctx.astype(q.dtype), k.astype(q.dtype)], axis=1)
+    v_all = jnp.concatenate([v_ctx.astype(q.dtype), v.astype(q.dtype)], axis=1)
+    kpos_all = jnp.concatenate([ctx_kpos, qpos], axis=1)
+    o = attention_direct(q, k_all, v_all, qpos, kpos_all, window=window,
+                         causal=True, attn_softcap=cfg.attn_softcap)
+    return dense(p["wo"], o.reshape(B, C, -1)), k, v
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ def get_model(model_cfg) -> SimpleNamespace:
             init=transformer.init_lm,
             train_loss=transformer.train_loss,
             prefill=transformer.prefill,
+            prefill_chunk=transformer.prefill_chunk,
             decode_step=transformer.decode_step,
             make_decode_cache=transformer.make_decode_cache,
             module=mod,

@@ -136,6 +136,29 @@ def block_decode(p, cfg, desc: LayerDesc, x, pos, k_cache, v_cache, ctx):
     return x, k_cache, v_cache
 
 
+def block_chunk(p, cfg, desc: LayerDesc, x, qpos, ck, cv, ctx_kpos, ctx):
+    """Chunked-prefill block: a C-token span attends to an external KV
+    context plus itself (paged serving).  Returns (x, k, v) where k/v are
+    the chunk's new cache rows."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, k, v = L.attn_prefill_chunk(
+        p["attn"], cfg, h, qpos, ck, cv, ctx_kpos,
+        window=desc.window, theta=desc.theta)
+    if cfg.sandwich_norm:
+        attn_out = L.rmsnorm(p["ln1_post"], attn_out, cfg.norm_eps)
+    if cfg.parallel_block:
+        ffn_out, _ = _ffn_apply(p, cfg, desc, h, ctx)
+        x = x + attn_out + ffn_out
+    else:
+        x = x + attn_out
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        ffn_out, _ = _ffn_apply(p, cfg, desc, h2, ctx)
+        if cfg.sandwich_norm:
+            ffn_out = L.rmsnorm(p["ln2_post"], ffn_out, cfg.norm_eps)
+        x = x + ffn_out
+    return x, k, v
+
+
 # ---------------------------------------------------------------------------
 # LM init
 # ---------------------------------------------------------------------------
@@ -375,6 +398,56 @@ def prefill(params, cfg, batch, ctx=None, *, max_len: Optional[int] = None):
     logits = logits_fn(params, cfg, last)[:, 0]
     cache = {"groups": caches, "pos": jnp.int32(S)}
     return logits, cache
+
+
+def prefill_chunk(params, cfg, batch, ctx_cache, ctx_kpos, pos0, valid,
+                  ctx=None):
+    """Prefill one fixed-size chunk of a prompt against an external KV
+    context (paged serving, DESIGN.md §6).
+
+    batch["tokens"] (B,C): the chunk (right-padded past ``valid``);
+    ctx_cache: decode-cache-layout groups with leaves (count,B,T,KV,D)
+    holding the already-prefilled context; ctx_kpos (B,T): absolute key
+    positions of those rows (<0 = unwritten, masked out of attention);
+    pos0: traced int32 absolute position of the chunk's first token;
+    valid: traced int32 count of real tokens in the chunk.
+
+    Returns (logits (B,V) at chunk position valid-1, new_kv) where new_kv
+    has leaves (count,B,C,KV,D) — the chunk's cache rows for the caller
+    to scatter into its pool.  Padded positions produce garbage rows the
+    caller must discard; their keys sit at positions >= the last valid
+    query, so the causal mask keeps them out of the valid logits.
+
+    Linear (non-windowed) caches and 1-D rope only — the callers gate on
+    that (windowed/m-rope configs keep monolithic prefill).
+    """
+    tokens = batch["tokens"]
+    B, C = tokens.shape
+    x = L.embed(params["embed"], tokens,
+                jnp.dtype(cfg.compute_dtype)) * embed_scale(cfg)
+    qpos = (pos0 + jnp.arange(C, dtype=jnp.int32))[None, :]
+    qpos = jnp.broadcast_to(qpos, (B, C)).astype(jnp.int32)
+    new_groups = []
+    for gi, (count, pattern) in enumerate(derive_groups(cfg)):
+        stacked = params["groups"][gi]
+        cache_g = ctx_cache["groups"][gi]
+
+        def body(xc, xs, pattern=pattern):
+            ps, cs = xs
+            new_cs = []
+            for j, desc in enumerate(pattern):
+                xc, k, v = block_chunk(ps[j], cfg, desc, xc, qpos,
+                                       cs[j]["k"], cs[j]["v"], ctx_kpos, ctx)
+                new_cs.append({"k": k, "v": v})
+            return xc, new_cs
+
+        x, new_g = jax.lax.scan(body, x, (stacked, cache_g))
+        new_groups.append(new_g)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, jnp.maximum(valid - 1, 0), 1,
+                                        axis=1)
+    logits = logits_fn(params, cfg, last)[:, 0]
+    return logits, {"groups": new_groups}
 
 
 def decode_step(params, cfg, cache, token, ctx=None):

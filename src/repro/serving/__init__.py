@@ -4,12 +4,22 @@ Public surface:
 
 * :class:`~repro.serving.request.Request` / ``RequestQueue`` — the queue
   front end; a request's accepted-token log is its replay RSI.
+  ``VirtualClock`` is the injectable engine clock (deterministic idle
+  waits for benchmarks/tests).
 * :class:`~repro.serving.engine.ServingEngine` / ``ServingReport`` — the
-  iteration-level scheduler over slot-major decode state with a per-slot
-  canary slice (1 fused launch + 1 scalar fault sync per engine step).
+  iteration-level scheduler over paged (or dense slot-major) decode state
+  with a block-granular canary (1 fused launch + 1 scalar fault sync per
+  engine step).
+* :mod:`~repro.serving.paged` — the shared KV block pool:
+  ``BlockAllocator`` plus the typed admission errors (``AdmissionError``
+  is permanent over-capacity, ``PoolSaturated`` a transient block
+  shortage).
 """
 
-from repro.serving.request import Request, RequestQueue
+from repro.serving.request import Request, RequestQueue, VirtualClock
 from repro.serving.engine import ServingEngine, ServingReport
+from repro.serving.paged import AdmissionError, BlockAllocator, PoolSaturated
 
-__all__ = ["Request", "RequestQueue", "ServingEngine", "ServingReport"]
+__all__ = ["Request", "RequestQueue", "VirtualClock", "ServingEngine",
+           "ServingReport", "AdmissionError", "BlockAllocator",
+           "PoolSaturated"]

@@ -10,19 +10,34 @@ The load-bearing regressions (ISSUE 6 acceptance):
   slice writes through pre-compiled executables, never a recompile);
 * a steady-state engine step is exactly 1 logical launch + 1 scalar
   fault sync.
+
+ISSUE 7 additions (paged KV pool + chunked prefill + bugfix batch):
+
+* paged decode is BIT-IDENTICAL to the dense engine on heterogeneous
+  prompt lengths, and chunked prefill to monolithic;
+* the canary attributes pool faults at (leaf, block) granularity and the
+  owner translation keeps ``injured_slots`` working; a flip on an
+  UNOWNED block evicts nobody;
+* over-budget requests are rejected at admission with a typed error
+  (the old engine silently overflowed past ``max_len``);
+* idle waits honor an injected virtual clock instead of busy-spinning
+  wall time.
 """
 
 import random
+import time
 
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.detect import (FaultReport, slot_leaf_prefix, slot_of_leaf,
-                               slot_view)
+from repro.core.detect import (FaultReport, block_leaf_prefix,
+                               block_of_leaf, block_view, slot_leaf_prefix,
+                               slot_of_leaf, slot_view)
 from repro.core.recover import plan_serving_recovery
 from repro.kernels import digest as kdigest
-from repro.serving import Request, RequestQueue, ServingEngine
+from repro.serving import (AdmissionError, PoolSaturated, Request,
+                           RequestQueue, ServingEngine, VirtualClock)
 
 S, MAX_LEN, K = 3, 48, 4   # one engine shape for most tests — the
 # module-level executable caches make every extra engine over it free
@@ -234,7 +249,7 @@ def test_k1_canary_catches_every_flip(cfg):
 def test_steady_state_one_launch_one_sync_zero_retraces(cfg):
     eng = mk_engine(cfg)
     eng.warm()
-    for u, rq in enumerate(mk_requests(cfg, S, gen=10**6)):
+    for u, rq in enumerate(mk_requests(cfg, S, gen=40)):
         eng.admit(rq, u)
     for _ in range(K):                 # settle one full rotation
         assert eng.engine_step()[2] is None
@@ -252,7 +267,7 @@ def test_steady_state_one_launch_one_sync_zero_retraces(cfg):
 def test_admission_and_eviction_zero_retraces(cfg):
     eng = mk_engine(cfg)
     eng.warm()
-    reqs = mk_requests(cfg, 2 * S, gen=10**6, seed=3)
+    reqs = mk_requests(cfg, 2 * S, gen=40, seed=3)
     for u in range(S):
         eng.admit(reqs[u], u)
     for _ in range(K):
@@ -299,3 +314,214 @@ def test_serve_summary_has_percentiles_and_is_seeded(cfg):
     for k in ("tokens_out", "faults", "replay_tokens",
               "retracted_tokens", "engine_steps", "admissions"):
         assert out[k] == out2[k], k
+
+
+# -- paged KV pool (ISSUE 7) --------------------------------------------
+
+
+HET_PLENS = (4, 11, 23, 6, 17)
+
+
+def mk_het_requests(cfg, n, gen=6, seed=0):
+    nprng = np.random.default_rng(seed)
+    return [Request(
+        rid=i,
+        prompt=nprng.integers(0, cfg.model.vocab_size,
+                              size=HET_PLENS[i % len(HET_PLENS)]
+                              ).astype(np.int32),
+        max_new_tokens=gen) for i in range(n)]
+
+
+def tokens_of(rep):
+    return {rid: r["tokens"] for rid, r in rep.per_request.items()}
+
+
+def test_block_view_and_injured_blocks():
+    pool = {"groups": [np.arange(24.0).reshape(4, 2, 3)]}
+    view = block_view(pool, 4)
+    assert sorted(view) == [block_leaf_prefix(b) for b in range(4)]
+    assert np.array_equal(view[block_leaf_prefix(2)]["groups"][0],
+                          pool["groups"][0][2])
+    assert block_of_leaf("block0007/groups/0/0/k") == 7
+    assert block_of_leaf("slot001/block0007/groups/0/0/k") == 7
+    assert block_of_leaf("slot001/pos") is None
+    rep = FaultReport(0, "checksum",
+                      leaves=["block0003/g/k", "slot001/block0001/g/v",
+                              "slot001/pos"])
+    assert rep.injured_blocks() == [1, 3]
+
+
+def test_plan_serving_recovery_unowned_block_evicts_nobody():
+    rep = FaultReport(5, "checksum", leaves=["block0009/groups/0/0/k"])
+    plan = plan_serving_recovery(rep, n_slices=4)
+    assert plan.scope == "slots" and plan.slots == []
+    assert plan.retract == 0
+
+
+def test_paged_bit_identical_to_dense_heterogeneous(cfg):
+    reqs = lambda: mk_het_requests(cfg, 5, gen=6)
+    dense = mk_engine(cfg, paged=False).run(reqs())
+    paged = mk_engine(cfg, paged=True).run(reqs())
+    assert paged.completed == 5 and paged.dropped == 0
+    assert tokens_of(paged) == tokens_of(dense)
+
+
+def test_chunked_prefill_matches_monolithic(cfg):
+    reqs = lambda: mk_het_requests(cfg, 5, gen=6, seed=2)
+    mono = mk_engine(cfg, paged=True, prefill_chunk=0).run(reqs())
+    chunk = mk_engine(cfg, paged=True, prefill_chunk=5).run(reqs())
+    assert chunk.completed == 5 and chunk.dropped == 0
+    assert tokens_of(chunk) == tokens_of(mono)
+
+
+def test_admission_overflow_rejected_typed(cfg):
+    # direct: both layouts raise the typed error before touching state
+    for paged in (True, False):
+        eng = mk_engine(cfg, paged=paged)
+        big = Request(rid=0, prompt=np.zeros(MAX_LEN, np.int32),
+                      max_new_tokens=8)
+        with pytest.raises(AdmissionError):
+            eng.admit(big, 0)
+        assert eng.slot_rid[0] is None
+        assert eng.report.admissions == 0
+    # run(): the oversized request is rejected and accounted; everyone
+    # else completes untouched
+    eng = mk_engine(cfg, paged=True)
+    reqs = mk_het_requests(cfg, 4, gen=6)
+    reqs.append(Request(rid=99, prompt=np.zeros(MAX_LEN, np.int32),
+                        max_new_tokens=8))
+    rep = eng.run(reqs)
+    assert rep.admission_rejected == 1
+    assert rep.summary()["admission_rejected"] == 1
+    assert rep.per_request[99]["dropped"]
+    assert rep.completed == 4 and rep.dropped == 1
+
+
+def test_paged_block_churn_zero_retraces(cfg):
+    eng = mk_engine(cfg, paged=True)
+    eng.warm()
+    for u, rq in enumerate(mk_het_requests(cfg, S, gen=20)):
+        eng.admit(rq, u)
+    for _ in range(K):
+        eng.engine_step()
+    kdigest.STATS.reset()
+    # churn with a DIFFERENT block count per admission (heterogeneous
+    # prompts): alloc/free must stay fixed-shape slice writes
+    churn = mk_het_requests(cfg, S, gen=20, seed=5)
+    for u in range(S):
+        eng._free(u)
+        eng.admit(churn[u], u)
+        eng.engine_step()
+    assert kdigest.STATS.traces == 0, (
+        f"block churn retraced {kdigest.STATS.traces} digest fns")
+
+
+def test_targeted_paged_fault_blocks_attribute_to_owner(cfg):
+    eng = mk_engine(cfg, paged=True)
+    reqs = mk_het_requests(cfg, S, gen=20)
+    for u, rq in enumerate(reqs):
+        eng.admit(rq, u)
+    for _ in range(K):
+        eng.engine_step()
+    victim = 1
+    owned_before = set(eng.alloc.owned(victim))
+    free_before = eng.alloc.free_count
+    u, key, _ = eng.corrupt_slot(random.Random(0), slot=victim,
+                                 armed_only=True)
+    assert u == victim
+    _, finite, report = eng.engine_step()
+    assert report is not None
+    assert report.injured_slots() == [victim]
+    # block-granular attribution maps into the victim's owned set
+    assert set(report.injured_blocks()) <= owned_before
+    q = RequestQueue()
+    evicted = eng.handle_fault(report, finite, 0.0, q)
+    assert evicted == [victim]
+    # the victim's blocks went back to the pool
+    assert eng.alloc.owned(victim) == []
+    assert eng.alloc.free_count == free_before + len(owned_before)
+    assert len(q) == 1 and q.pop_ready(0.0).rid == reqs[victim].rid
+    # healthy slots live on; no refire next step
+    assert all(eng.slot_rid[i] is not None for i in range(S)
+               if i != victim)
+    _, _, rep2 = eng.engine_step()
+    assert rep2 is None
+
+
+def test_unowned_block_fault_evicts_nobody(cfg):
+    eng = mk_engine(cfg, paged=True)
+    for u, rq in enumerate(mk_het_requests(cfg, S, gen=20)):
+        eng.admit(rq, u)
+    for _ in range(K):
+        eng.engine_step()
+    # pick a free (unowned, non-scratch) block whose unit is armed for
+    # the NEXT step's check
+    cls = eng.step_count % K
+    key = next(k for b in range(1, eng.n_blocks)
+               if b not in eng.alloc.owner
+               for k in eng._block_keys[b]
+               if eng.plan.index_of(k) % K == cls)
+    u, _, _ = eng.corrupt_slot(random.Random(0), key=key)
+    assert u == -1                       # nobody owns it
+    _, finite, report = eng.engine_step()
+    assert report is not None
+    assert report.injured_slots() == []  # no owner -> no victim
+    q = RequestQueue()
+    evicted = eng.handle_fault(report, finite, 0.0, q)
+    assert evicted == [] and len(q) == 0
+    assert all(eng.slot_rid[i] is not None for i in range(S))
+    assert eng.report.faults_on_free_slots == 1
+    _, _, rep2 = eng.engine_step()       # re-certified: no refire
+    assert rep2 is None
+
+
+def test_pool_saturation_defers_admission(cfg):
+    # pool sized for ~one in-flight request: plen=6 + 1 + gen=8 -> 15
+    # positions -> 2 blocks of 8; capacity 3 admits one request plus a
+    # block of slack, so concurrent admissions must serialize
+    eng = mk_engine(cfg, paged=True, pool_blocks=4)
+    reqs = mk_requests(cfg, 3, gen=8)
+    rep = eng.run(reqs)
+    assert rep.completed == 3 and rep.dropped == 0
+    assert rep.admission_rejected == 0
+    # direct API surface: a second allocation while saturated raises
+    eng2 = mk_engine(cfg, paged=True, pool_blocks=4)
+    eng2.admit(mk_requests(cfg, 1, gen=8)[0], 0)
+    with pytest.raises(PoolSaturated):
+        eng2.admit(mk_requests(cfg, 2, gen=8)[1], 1)
+
+
+# -- engine clock (bugfix: idle waits honor the injected clock) ---------
+
+
+def test_virtual_clock_idle_wait_never_touches_wall_sleep(cfg, monkeypatch):
+    calls = []
+    monkeypatch.setattr(time, "sleep",
+                        lambda dt: calls.append(dt))
+    clock = VirtualClock()
+    eng = mk_engine(cfg, paged=True)
+    # a gap in arrivals forces the idle-wait path between requests
+    reqs = mk_requests(cfg, 2, gen=4, arrivals=[0.0, 25.0])
+    rep = eng.run(reqs, clock=clock)
+    assert rep.completed == 2
+    assert calls == [], ("idle wait busy-spun wall time despite the "
+                         "injected virtual clock")
+    assert clock.t >= 25.0               # the wait advanced VIRTUAL time
+
+
+def test_wall_clock_idle_wait_sleeps_once_not_in_1ms_slices(cfg,
+                                                            monkeypatch):
+    real_sleep = time.sleep
+    calls = []
+
+    def counting_sleep(dt):
+        calls.append(dt)
+        real_sleep(min(dt, 0.2))         # keep the test fast
+    monkeypatch.setattr(time, "sleep", counting_sleep)
+    eng = mk_engine(cfg, paged=True)
+    reqs = mk_requests(cfg, 2, gen=4, arrivals=[0.0, 0.15])
+    rep = eng.run(reqs)
+    assert rep.completed == 2
+    # the old code slept in min(1e-3, ...) slices: ~150 calls for this
+    # gap.  The fix sleeps the full remaining wait in one call.
+    assert len(calls) <= 3, f"{len(calls)} sleep calls (busy-spin)"
