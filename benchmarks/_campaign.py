@@ -90,6 +90,7 @@ class Trial:
     recovery_ms: float = 0.0
     phase_ms: Dict[str, float] = field(default_factory=dict)
     replayed: int = 0
+    bytes_moved: int = 0           # repair bytes (parity / shard_patch)
 
 
 class Campaign:
@@ -177,7 +178,8 @@ class Campaign:
                   canary_slices: int = 4,
                   plan: Optional[InjectionPlan] = None,
                   donate: bool = False,
-                  fused: bool = False) -> Trial:
+                  fused: bool = False,
+                  parity: bool = False) -> Trial:
         """One injection trial.
 
         ``plan``   : fixed InjectionPlan (its ``step`` is the injection
@@ -192,11 +194,18 @@ class Campaign:
                      (``ChecksumCanary.fuse_into_step``); detection step
                      indices, attribution and recovery semantics must
                      conform to the pair/check_and_arm paths.
+        ``parity`` : maintain the device-resident XOR parity shard
+                     (implies ``use_canary`` — maintenance rides the
+                     canary's launches) and give recovery the parity_xor
+                     rung: snapshot-free O(bytes/D) shard reconstruction
+                     for checksum-attributed faults.  Under fused+donated
+                     detection the faulting version is consumed by the
+                     detecting launch, so those trials still replay.
         """
         if mode == "care" and donate:
             raise ValueError("care mode diagnoses the live IV block and is "
                              "not defined for a donated loop")
-        if fused:
+        if fused or parity:
             use_canary = True
         if plan is None:
             tgt = target or rng.choices(["params", "opt", "iv"],
@@ -225,6 +234,15 @@ class Campaign:
         canary = ChecksumCanary(self.states[t0], n_slices=canary_slices,
                                 ctx=self.ctx) \
             if use_canary else None
+        pstore = None
+        if parity:
+            # built over the HEALTHY pre-injection version, exactly like
+            # the canary's initial digest table (the plan is globally
+            # cached, so trials share layout + compiled parity math)
+            from repro.core import ParityStore
+            pstore = ParityStore(self.states[t0], ctx=self.ctx)
+            pstore.build(self.states[t0], t0)
+            canary.attach_parity(pstore)
         factory = canary.fuse_into_step(self.raw_step(), donate=donate) \
             if fused else None
         # bounded: the spike trap reads only the last LOSS_WINDOW losses
@@ -297,9 +315,10 @@ class Campaign:
         # paper's baseline C/R — expensive because it replays everything).
         runtime = RecoveryRuntime(step_fn=self.step, batch_fn=self.bfn,
                                   iv_registry=promote(self.cfg, self.B),
-                                  micro=micro,
+                                  micro=micro, parity=pstore,
                                   checkpoint=lambda: (self.states[0], 0),
-                                  donated=donate, shardings=self.shardings)
+                                  donated=donate, shardings=self.shardings,
+                                  canary=canary)
         ladder = None
         if mode == "care":
             # CARE cannot repair loop state: if any IV is corrupted the RSI
@@ -322,6 +341,7 @@ class Campaign:
         trial.recovery_ms = 1e3 * (time.perf_counter() - t1)
         trial.phase_ms = {k: 1e3 * v for k, v in ev.phase_seconds.items()}
         trial.replayed = ev.steps_replayed
+        trial.bytes_moved = ev.bytes_moved
 
         # exactness: continue to the horizon and compare bitwise with truth
         cont = fixed
@@ -333,12 +353,13 @@ class Campaign:
     def run(self, n_trials: int, mode: str = "iterpro",
             target: Optional[str] = None, seed: int = 1,
             use_canary: bool = False, canary_slices: int = 4,
-            donate: bool = False, fused: bool = False) -> List[Trial]:
+            donate: bool = False, fused: bool = False,
+            parity: bool = False) -> List[Trial]:
         rng = random.Random(seed)
         return [self.run_trial(rng, mode=mode, target=target,
                                use_canary=use_canary,
                                canary_slices=canary_slices, donate=donate,
-                               fused=fused)
+                               fused=fused, parity=parity)
                 for _ in range(n_trials)]
 
 

@@ -100,6 +100,34 @@ def run(campaign: Campaign, ckpt_interval: int = 200, n_trials: int = 24,
                           use_canary=True, canary_slices=4)
     rung_table = by_rung(trials, step_s)
 
+    # parity regime: donated pair + device-resident XOR parity — the
+    # snapshot-free rung.  Measured per fault: how often parity_xor wins
+    # the ladder, its repair wall, bytes reconstructed (O(bytes/D)), and
+    # the fixed memory price (1/D of the covered state)
+    ptrials = campaign.run(max(8, n_trials // 2), mode="iterpro", seed=37,
+                           parity=True, donate=True, canary_slices=4)
+    prec = [t for t in ptrials if t.outcome == "crash" and t.recovered]
+    pxor = [t for t in prec if t.rung == "parity_xor"]
+    from repro.core import ParityStore
+    pst = ParityStore(state)
+    pst.build(state)
+    state_bytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(state))
+    parity_row = {
+        "trials": len(ptrials),
+        "crashes_recovered": len(prec),
+        "parity_xor_share": len(pxor) / max(1, len(prec)),
+        "mean_repair_ms": float(np.mean([t.recovery_ms for t in pxor])
+                                ) if pxor else 0.0,
+        "mean_bytes_moved": float(np.mean([t.bytes_moved for t in pxor])
+                                  ) if pxor else 0.0,
+        "mean_steps_replayed": float(np.mean([t.replayed for t in pxor])
+                                     ) if pxor else 0.0,
+        "all_exact": bool(all(t.exact for t in prec)) if prec else True,
+        "memory_bytes": pst.memory_bytes,
+        "memory_overhead": pst.memory_bytes / state_bytes,
+        "n_shards": pst.plan.n_shards,
+    }
+
     # serving: per-fault client cost from the SLO benchmark, if it ran
     serving_row = None
     if serving is not None:
@@ -134,6 +162,7 @@ def run(campaign: Campaign, ckpt_interval: int = 200, n_trials: int = 24,
         "ckpt_interval": ckpt_interval,
         "by_rung": rung_table,
         "rung_trials": n_trials,
+        "parity": parity_row,
         "serving": serving_row,
     }
 
@@ -178,6 +207,31 @@ def render(out: Dict) -> str:
                      "fires: in-place repairs (eq1, shard_patch) cost "
                      "milliseconds and replay nothing; replay pays <=K "
                      "steps; only the checkpoint rung pays C/R prices.")
+    if out.get("parity"):
+        p = out["parity"]
+        lines.append("")
+        lines.append("### Parity rung (snapshot-free reconstruction, "
+                     "donated pair + XOR parity)")
+        lines.append("| recovered share | mean repair wall (ms) "
+                     "| mean bytes moved | steps replayed "
+                     "| memory overhead |")
+        lines.append("|---|---|---|---|---|")
+        lines.append(
+            f"| {100 * p['parity_xor_share']:.0f}% of "
+            f"{p['crashes_recovered']} recovered crashes "
+            f"| {p['mean_repair_ms']:.1f} "
+            f"| {p['mean_bytes_moved']:.0f} B "
+            f"| {p['mean_steps_replayed']:.1f} "
+            f"| {100 * p['memory_overhead']:.1f}% = 1/D, D="
+            f"{p['n_shards']} |")
+        lines.append("")
+        lines.append(f"Reconstruction reads O(bytes/D) from live "
+                     f"survivors + the device-resident parity shard — 0 "
+                     f"host-snapshot bytes, 0 replayed steps; every "
+                     f"recovered trial bit-exact: {p['all_exact']}. "
+                     f"Faults the rung cannot certify (digest-collision "
+                     f"ambiguity, multi-shard injury) escalate to replay "
+                     f"— exact-or-abort, never a guess.")
     if out.get("serving"):
         s = out["serving"]
         inj, hl = s["injured_added_latency_ms"], s["healthy_added_latency_ms"]

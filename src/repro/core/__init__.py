@@ -10,7 +10,7 @@ from repro.core.fused_step import FusedStepFactory  # noqa: F401
 from repro.core.icp import promote, recoverable_iv_count  # noqa: F401
 from repro.core.induction import IVRegistry, IVSpec, RecoveryAbort  # noqa: F401
 from repro.core.microcheckpoint import MicroCheckpointer, Snapshot  # noqa: F401
-from repro.core.parity import ParityManager  # noqa: F401
+from repro.core.parity import ParityPlan, ParityStore, parity_plan_for  # noqa: F401
 from repro.core.recover import RecoveryEvent, RecoveryFailed, RecoveryRuntime  # noqa: F401
 from repro.core.recovery_table import RecoveryTable, TableEntry  # noqa: F401
 from repro.core.replay import ReplayResult, replay  # noqa: F401

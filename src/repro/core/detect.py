@@ -139,6 +139,14 @@ class FaultReport:
     #: (one extra transfer, fault path only).
     resolver: Optional[Callable] = \
         field(default=None, repr=False, compare=False)
+    #: True when the faulting state version was DONATED into the step that
+    #: detected the fault (in-step fused detection under donation): the
+    #: surviving shards' buffers are dead, so the in-place rungs — parity
+    #: reconstruction included — must abort to snapshot+replay.  The
+    #: donated PAIR protocol checks BEFORE the step consumes the buffer,
+    #: so its reports stay ``consumed=False`` and parity can repair live
+    #: survivors even under donation.
+    consumed: bool = False
 
     def resolve(self) -> List[str]:
         """Materialise ``leaves`` (and ``shards``, on a mesh) from a
@@ -279,6 +287,30 @@ class ChecksumCanary:
         #: generation, the other slot is scatter-armed in place.
         self._tables = [table, table.copy()]
         self._gen = 0
+        #: optional device-resident parity store (core/parity.ParityStore):
+        #: when attached, parity maintenance rides the canary's own fused
+        #: launches — incremental (old^new^parity) inside ``check_and_arm``,
+        #: rebuild-of-the-armed-version inside ``arm``/``arm_current`` —
+        #: so the launch/sync contract of every protocol is unchanged.
+        self._parity = None
+        #: the read table that served the most recent FIRED check.  The
+        #: fused protocols commit the generation bump before the flag is
+        #: fetched, so after a fault ``reference`` already points at the
+        #: next generation (whose row for the faulted leaf is stale);
+        #: recovery certification needs the rows the mismatch was actually
+        #: compared against.  Set on the fault path only.
+        self._fault_reference = None
+
+    def attach_parity(self, store) -> None:
+        """Ride the given ParityStore on every subsequent arm: the store's
+        buffer is donated through the canary's fused programs and committed
+        in lockstep with the generation tables.  The store's plan must be
+        built over the same state structure as this canary's plan."""
+        self._parity = store
+
+    @property
+    def parity_store(self):
+        return self._parity
 
     @property
     def generation(self) -> int:
@@ -312,8 +344,16 @@ class ChecksumCanary:
         'check': ``(pack_buf, leaves, ref_read) -> (pack_buf, flag, bad)``
         (no table written); 'arm': ``(pack_buf, leaves, ref_write) ->
         (pack_buf, new_write)`` (no comparison).
+
+        With a parity store attached, the arming kinds grow a donated
+        parity-buffer argument plus the covered old/new leaves and return
+        the updated parity as an extra output — the parity XOR rides the
+        SAME launch (the steady-state contract is untouched; only the
+        bytes streamed grow).  'check' never touches parity.
         """
-        key = (self.plan, self.n_slices, kind, r)
+        pplan = self._parity.plan \
+            if (self._parity is not None and kind != "check") else None
+        key = (self.plan, self.n_slices, kind, r, pplan)
         fn = _FUSED_CACHE.get(key)
         if fn is not None:
             return fn
@@ -327,12 +367,38 @@ class ChecksumCanary:
                 return buf, flag, bad
             fn = jax.jit(check_fn, donate_argnums=(0,))
         elif kind == "arm":
-            def arm_fn(buf, leaves, ref_write):
-                buf, _, _, new_write = core(buf, leaves, ref_write, ref_write)
-                return buf, new_write
-            fn = jax.jit(arm_fn, donate_argnums=(0, 2))
+            if pplan is None:
+                def arm_fn(buf, leaves, ref_write):
+                    buf, _, _, new_write = core(
+                        buf, leaves, ref_write, ref_write)
+                    return buf, new_write
+                fn = jax.jit(arm_fn, donate_argnums=(0, 2))
+            else:
+                def arm_fn(buf, leaves, ref_write, parity, armed_leaves):
+                    buf, _, _, new_write = core(
+                        buf, leaves, ref_write, ref_write)
+                    # donated-pair maintenance: only ONE state version is
+                    # visible, so the per-step parity form is a rebuild of
+                    # the armed (healthy-assumed) version, in this launch
+                    new_parity = pplan.rebuild_leaves(armed_leaves)
+                    return buf, new_write, new_parity
+                fn = jax.jit(arm_fn, donate_argnums=(0, 2, 3))
         else:
-            fn = jax.jit(core, donate_argnums=(0, 3))
+            if pplan is None:
+                fn = jax.jit(core, donate_argnums=(0, 3))
+            else:
+                def check_arm_fn(buf, leaves, ref_read, ref_write, parity,
+                                 old_leaves, new_leaves):
+                    buf, flag, bad, new_write = core(
+                        buf, leaves, ref_read, ref_write)
+                    # incremental old^new^parity, gated on THIS launch's
+                    # fault flag: a detected fault zeroes the delta so the
+                    # committed parity keeps describing the last healthy
+                    # certified version (the one reconstruction restores)
+                    new_parity = pplan.update_leaves(
+                        parity, old_leaves, new_leaves, flag)
+                    return buf, flag, bad, new_write, new_parity
+                fn = jax.jit(check_arm_fn, donate_argnums=(0, 3, 4))
         _FUSED_CACHE[key] = (fn, union)
         return fn, union
 
@@ -415,11 +481,21 @@ class ChecksumCanary:
         fn, union = self._fused_fn("check_arm", r)
         kdigest.STATS.launches += 1
         ref_read, ref_write = self.begin_update()
-        buf, flag, bad, new_write = fn(
-            self.plan.take_buffer(union), leaves, ref_read, ref_write)
+        if self._parity is not None:
+            pp = self._parity.plan
+            buf, flag, bad, new_write, new_parity = fn(
+                self.plan.take_buffer(union), leaves, ref_read, ref_write,
+                self._parity.parity, pp.leaves(tree), pp.leaves(armed_tree))
+            # the updated parity tracks ``armed_tree`` — the post-step
+            # state version, same stamp as the donated pair's arm half
+            self._parity.commit(new_parity, step + 1)
+        else:
+            buf, flag, bad, new_write = fn(
+                self.plan.take_buffer(union), leaves, ref_read, ref_write)
         self.plan.put_buffer(union, buf)
         self.commit_update(new_write)
         if bool(kdigest.fetch(flag)):       # the step's ONE host sync
+            self._fault_reference = ref_read
             return self._report(step, chk, bad)
         return None
 
@@ -438,6 +514,7 @@ class ChecksumCanary:
                             self._tables[self._gen & 1])
         self.plan.put_buffer(union, buf)
         if bool(kdigest.fetch(flag)):
+            self._fault_reference = self._tables[self._gen & 1]
             return self._report(step, chk, bad)
         return None
 
@@ -449,6 +526,7 @@ class ChecksumCanary:
         # canary) survives into the mask for (leaf, shard) attribution
         bad = jnp.any(table != self.reference, axis=-1)
         if bool(kdigest.fetch(jnp.any(bad))):
+            self._fault_reference = self.reference
             return self._report(step, range(len(self._keys)), bad)
         return None
 
@@ -463,8 +541,15 @@ class ChecksumCanary:
         fn, union = self._fused_fn("arm", step % self.n_slices)
         kdigest.STATS.launches += 1
         _, ref_write = self.begin_update()
-        buf, new_write = fn(self.plan.take_buffer(union),
-                            self._gather(tree, arm), ref_write)
+        if self._parity is not None:
+            buf, new_write, new_parity = fn(
+                self.plan.take_buffer(union), self._gather(tree, arm),
+                ref_write, self._parity.parity,
+                self._parity.plan.leaves(tree))
+            self._parity.commit(new_parity, step + 1)
+        else:
+            buf, new_write = fn(self.plan.take_buffer(union),
+                                self._gather(tree, arm), ref_write)
         self.plan.put_buffer(union, buf)
         self.commit_update(new_write)
 
@@ -527,6 +612,7 @@ class ChecksumCanary:
             table = self.plan.digest_table(tree)
             self._gen += 1
             self._tables[self._gen & 1] = table
+            self._fault_reference = None
             return
         idx = sorted(self.plan.index_of(k) for k in keys)
         if not idx:
@@ -544,4 +630,19 @@ class ChecksumCanary:
         """Host copy of the surviving reference table (debug/telemetry;
         one sync).  Sharded canaries yield (n_shards, 2) per leaf."""
         table = kdigest.fetch(self.reference)
+        return {k: table[..., i, :] for i, k in enumerate(self._keys)}
+
+    def fault_reference_digests(self) -> Dict[str, np.ndarray]:
+        """Host copy of the table generation that served the most recent
+        FIRED check — the rows the mismatch was compared against, which is
+        what a repair must be certified against.  ``check_and_arm`` and
+        the in-step fused protocol commit the generation bump before the
+        flag sync, so ``reference_digests()`` is already one generation
+        ahead on the fault path; the pair protocol's ``check`` commits
+        nothing and the two accessors agree.  Falls back to the current
+        reference when no check has fired since the last refresh."""
+        table = self._fault_reference
+        if table is None:
+            table = self.reference
+        table = kdigest.fetch(table)
         return {k: table[..., i, :] for i, k in enumerate(self._keys)}

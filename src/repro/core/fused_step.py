@@ -159,6 +159,9 @@ class FusedStepFactory:
         core, union = kdigest.check_arm_subcomputation(self.plan, chk, arm) \
             if (chk or arm) else (None, ())
         plan, step_fn = self.plan, self.step_fn
+        pstore = self.canary.parity_store
+        pplan = pstore.plan if (pstore is not None and core is not None) \
+            else None
 
         def pin_layout(new_state):
             # mesh loops: constrain the OUTPUT state to the input layout.
@@ -182,7 +185,7 @@ class FusedStepFactory:
             donate_argnums = (0,) if self.donate else ()
             jfn = jax.jit(fused, donate_argnums=donate_argnums)
             lowered = jfn.lower(state_sds, *args_sds)
-        else:
+        elif pplan is None:
             def fused(state, buf, ref_read, ref_write, *args):
                 in_leaves = plan.leaves(state)
                 new_state, aux = step_fn(state, *args)
@@ -204,6 +207,32 @@ class FusedStepFactory:
             buf_sds = _sds(self.plan.take_buffer(union))
             lowered = jfn.lower(state_sds, buf_sds, table_sds, table_sds,
                                 *args_sds)
+        else:
+            def fused(state, buf, ref_read, ref_write, parity, *args):
+                in_leaves = plan.leaves(state)
+                p_old = pplan.leaves(state)
+                new_state, aux = step_fn(state, *args)
+                new_state = pin_layout(new_state)
+                out_leaves = plan.leaves(new_state)
+                buf, flag, bad, new_write = core(
+                    buf,
+                    [in_leaves[i] for i in chk] +
+                    [out_leaves[i] for i in arm],
+                    ref_read, ref_write)
+                # incremental parity (old ^ new ^ parity) riding the SAME
+                # fused launch, gated on this step's own fault flag: XLA
+                # schedules the old-shard reads with the check-slice
+                # digest reads, before the donated in-place writes
+                new_parity = pplan.update_leaves(
+                    parity, p_old, pplan.leaves(new_state), flag)
+                return new_state, aux, buf, flag, bad, new_write, new_parity
+            donate_argnums = (1, 3, 4) + ((0,) if self.donate else ())
+            jfn = jax.jit(fused, donate_argnums=donate_argnums)
+            table_sds = _sds(self.canary.reference)
+            buf_sds = _sds(self.plan.take_buffer(union))
+            parity_sds = _sds(pstore.parity)
+            lowered = jfn.lower(state_sds, buf_sds, table_sds, table_sds,
+                                parity_sds, *args_sds)
         t0 = time.perf_counter()
         compiled = lowered.compile()
         self.compile_seconds += time.perf_counter() - t0
@@ -214,7 +243,9 @@ class FusedStepFactory:
         per_fn = _EXEC_CACHE.get(self.step_fn)
         if per_fn is None:
             per_fn = _EXEC_CACHE[self.step_fn] = {}
-        key = (self.plan, self.n_slices, self.donate, r, sig)
+        pstore = self.canary.parity_store
+        key = (self.plan, self.n_slices, self.donate, r, sig,
+               pstore.plan if pstore is not None else None)
         ent = per_fn.get(key)
         if ent is None:
             ent = self._build(r, _sds(state), _sds(args))
@@ -261,14 +292,31 @@ class FusedStepFactory:
             new_state, aux = compiled(state, *args)
             return new_state, aux, None
         ref_read, ref_write = can.begin_update()
-        new_state, aux, buf, flag, bad, new_write = compiled(
-            state, self.plan.take_buffer(union), ref_read, ref_write, *args)
+        pstore = can.parity_store
+        if pstore is not None:
+            new_state, aux, buf, flag, bad, new_write, new_parity = compiled(
+                state, self.plan.take_buffer(union), ref_read, ref_write,
+                pstore.parity, *args)
+            pstore.commit(new_parity, s + 1)
+        else:
+            new_state, aux, buf, flag, bad, new_write = compiled(
+                state, self.plan.take_buffer(union), ref_read, ref_write,
+                *args)
         self.plan.put_buffer(union, buf)
         can.commit_update(new_write)
         report = None
         if bool(kdigest.fetch(flag)):       # the step's ONE host sync
+            # the commit above already bumped the generation; the rows
+            # this check actually compared against live in ref_read —
+            # recovery certifies reconstructions against THEM
+            can._fault_reference = ref_read
+            # under donation the faulting input version was consumed by
+            # this very launch: the parity rung's survivors are dead, and
+            # the report says so up front (consumed=True) instead of
+            # letting the rung discover it post-hoc
             report = FaultReport(
                 s, "checksum",
                 detail="in-step fused check",
-                resolver=lambda: can._attribute(chk, bad))
+                resolver=lambda: can._attribute(chk, bad),
+                consumed=self.donate)
         return new_state, aux, report

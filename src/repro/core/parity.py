@@ -1,79 +1,525 @@
-"""Parity manager — manufactured redundancy for sharded state (the ICP
-analogue at tensor level, DESIGN.md §4.2).
+"""Device-resident XOR parity — manufactured redundancy for sharded state
+(the ICP analogue at tensor level; DESIGN.md §4.2 and the parity-rung
+section).
 
-For a state sharded N ways over the data axis, one XOR parity shard per leaf
-(1/N memory overhead) makes any single lost/corrupt shard exactly
-reconstructible.  On the simulator the 'shards' are explicit array slices;
-on a real pod the fold is a reduce over the data axis (the kernels are
-shard-local either way).
+One parity shard per covered state leaf (params AND optimizer state): for a
+leaf split into D shards, ``parity = XOR_d shard_d`` (over the raw ``to_i32``
+bits), so any single lost or corrupt shard is exactly reconstructible from
+the surviving peers plus parity — ``shard_j = parity ^ XOR_{d != j} shard_d``
+— with no host snapshot and no replay.  XOR is bit-exact, so the
+exact-or-abort rule holds with no floating-point caveats.
+
+Coordinate system (the satellite bugfix this module exists for): the shard
+boundaries are derived from each leaf's actual ``NamedSharding`` slices
+(``kernels.digest.shard_indices``, mesh-flat device order — the SAME map the
+sharded canary's digest tables and ``host_shard_checksums`` use), so the
+(leaf, shard) a ``FaultReport`` attributes and the parity block it indexes
+are one coordinate system by construction.  The seed's ``_split``
+(first-divisible-dim) could disagree with a TP-sharded layout; a slice-map
+derivation cannot.  Off-mesh the "shards" are D equal row-aligned chunks of
+the flat ``to_i32`` view — again used identically by build, update and
+reconstruct.
+
+Replication: a leaf that is only partially sharded (e.g. TP-sharded but
+DP-replicated) maps several devices to the SAME logical slice.  XOR over
+identical copies self-cancels (an even replica count contributes zero!),
+so the stream is built over the leaf's UNIQUE logical blocks — the slice
+map deduplicated in mesh-flat device order — with zero rows padding the
+shard axis.  ``device_block[key]`` translates a device-coordinate shard id
+(what the sharded canary attributes) into the unique-block coordinate this
+module reconstructs in; a repair is placed back on EVERY device holding
+the injured block, keeping replicas bit-consistent.
+
+Layout: the per-leaf parity blocks are concatenated into ONE int32 buffer —
+
+  * off-mesh: tile-shaped ``(nt, TILE_ROWS, LANES)`` so the hot-path update
+    is a single Pallas launch (``kernels.parity.xor_update_tiles``, parity
+    aliased in place);
+  * on a mesh: ``(D, Crow)`` sharded ``P(axis_names, None)`` like the digest
+    packing buffers — each device holds 1/D of the parity (total memory
+    overhead = state_bytes/D).
+
+The hot-path entry points (``update_leaves`` / ``rebuild_leaves``) are pure
+and traceable: the canary embeds them INSIDE its fused check/arm programs
+(core/detect.py) and the fused step factory inside the donated step itself
+(core/fused_step.py), so parity maintenance adds ZERO launches and ZERO
+syncs to the steady state.  Updates are gated on the in-launch fault flag —
+a detected fault zeroes the delta, so the committed parity keeps describing
+the last healthy certified state version (the version the canary's read
+generation certifies, which is exactly what reconstruction must produce).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.kernels import ops as kops
+from repro.kernels import digest as kdigest
+from repro.kernels import parity as pk
+from repro.kernels import ref as kref
 from repro.kernels.ops import leaf_key
 
+LANES = pk.LANES
+TILE_ROWS = pk.TILE_ROWS
+TILE = TILE_ROWS * LANES
 
-def _split(leaf, n_shards: int):
-    """Shard a leaf on its first divisible dim (fallback: flat split)."""
-    arr = jnp.asarray(leaf)
-    if arr.ndim and arr.shape[0] % n_shards == 0:
-        return jnp.split(arr, n_shards, axis=0)
-    flat = arr.reshape(-1)
-    pad = (-flat.shape[0]) % n_shards
-    flat = jnp.pad(flat, (0, pad))
-    return jnp.split(flat, n_shards)
-
-
-def _join(shards, like):
-    arr = jnp.asarray(like)
-    if arr.ndim and arr.shape[0] % len(shards) == 0:
-        return jnp.concatenate(shards, axis=0)
-    flat = jnp.concatenate(shards)
-    return flat[: arr.size].reshape(arr.shape)
+#: dtypes whose ``to_i32`` view is invertible (``from_i32`` restores the
+#: exact bits).  int64/float64 views are lossy (truncated), so leaves of
+#: those dtypes are NOT parity-covered — a fault there escalates past the
+#: parity rung instead of risking a silent wrong-bits repair.
+_INVERTIBLE = tuple(map(jnp.dtype, (
+    jnp.int32, jnp.float32, jnp.uint32,
+    jnp.bfloat16, jnp.float16, jnp.int16, jnp.uint16,
+    jnp.int8, jnp.uint8)))
 
 
-class ParityManager:
-    """Maintains one parity 'shard' per leaf of a tree."""
+def _covered(key: str, dtype) -> bool:
+    """Parity coverage: params + optimizer state (everything but the IV
+    block, which Eq.(1) repairs for free) in invertible dtypes."""
+    return not key.startswith("iv") and jnp.dtype(dtype) in _INVERTIBLE
 
-    def __init__(self, n_shards: int):
+
+def _norm_slices(idx, shape) -> Tuple[Tuple[int, int], ...]:
+    """devices_indices_map entry -> ((start, stop), ...) per dim."""
+    out = []
+    for sl, dim in zip(idx, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+class ParityPlan:
+    """Block layout + traceable parity math for one (structure, sharding)
+    pair.  Cached globally (``parity_plan_for``) so every store over the
+    same structure — e.g. one per campaign trial — shares the layout and
+    the compiled functions that close over it (no per-trial retraces)."""
+
+    def __init__(self, keys: Tuple[str, ...],
+                 shapes: Dict[str, Tuple[int, ...]],
+                 dtypes: Dict[str, str],
+                 slices: Optional[Dict[str, Tuple]],
+                 n_shards: int, mesh=None):
+        self.keys = keys
+        self.key_set = frozenset(keys)
+        self.shapes = shapes
+        self.dtypes = dtypes
+        #: key -> UNIQUE ((start, stop), ...) slice tuples in first-seen
+        #: mesh-flat device order — mesh mode only (replicas deduplicated)
+        self.slices = slices
         self.n_shards = n_shards
-        self.parity: Dict[str, np.ndarray] = {}
+        self.mesh = mesh
+        self.axis_names = tuple(mesh.axis_names) if mesh is not None else ()
 
-    def build(self, tree) -> None:
-        def visit(path, leaf):
-            shards = _split(leaf, self.n_shards)
-            self.parity[leaf_key(path)] = np.asarray(kops.xor_fold(shards))
-            return leaf
+        #: per-key common block length (int32 elements; blocks are padded
+        #: to it so every leaf contributes equal columns to the stream)
+        self.block_len: Dict[str, int] = {}
+        #: per-key per-block true (unpadded) sizes and shapes
+        self.block_sizes: Dict[str, Tuple[int, ...]] = {}
+        self.block_shapes: Dict[str, Tuple[Tuple[int, ...], ...]] = {}
+        #: per-key count of unique logical blocks (<= n_shards)
+        self.n_blocks: Dict[str, int] = {}
+        #: per-key device-coordinate shard id -> unique block id (mesh:
+        #: the sharded canary attributes faults per DEVICE; off-mesh the
+        #: two coordinate systems coincide)
+        self.device_block: Dict[str, Tuple[int, ...]] = {}
+        off = 0
+        self.offsets: Dict[str, int] = {}
+        for k in keys:
+            shape = shapes[k]
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            if slices is None:
+                c = max(1, -(-size // n_shards))
+                self.block_len[k] = c
+                self.block_sizes[k] = tuple(
+                    max(0, min(c, size - d * c)) for d in range(n_shards))
+                self.block_shapes[k] = tuple(
+                    (self.block_sizes[k][d],) for d in range(n_shards))
+                self.n_blocks[k] = n_shards
+                self.device_block[k] = tuple(range(n_shards))
+            else:
+                uniq, dev_to_blk = slices[k]
+                bshapes = tuple(
+                    tuple(stop - start for start, stop in idx)
+                    for idx in uniq)
+                bsizes = tuple(
+                    int(np.prod(bs, dtype=np.int64)) if bs else 1
+                    for bs in bshapes)
+                self.block_shapes[k] = bshapes
+                self.block_sizes[k] = bsizes
+                self.block_len[k] = max(bsizes)
+                self.n_blocks[k] = len(uniq)
+                self.device_block[k] = dev_to_blk
+            self.offsets[k] = off
+            off += self.block_len[k]
+        #: total parity stream length (int32 elements)
+        self.stream_len = off
+        if mesh is None:
+            self.n_tiles = max(1, -(-self.stream_len // TILE))
+            self.buffer_shape = (self.n_tiles, TILE_ROWS, LANES)
+        else:
+            crow = max(LANES, -(-self.stream_len // n_shards))
+            crow = -(-crow // LANES) * LANES
+            self.buffer_shape = (n_shards, crow)
+        self._recon_cache: Dict[Tuple[str, int], object] = {}
 
-        jax.tree_util.tree_map_with_path(visit, tree)
-
-    def repair(self, tree, lost_shard: int, keys: Optional[List[str]] = None):
-        """Repair the given shard index of every (or the named) leaves.
-        Parity payloads have the dtype/shape of one shard, so reconstruction
-        is a direct XOR fold with the survivors."""
-        want = set(keys) if keys is not None else None
-
-        def visit(path, leaf):
-            k = leaf_key(path)
-            if want is not None and k not in want:
-                return leaf
-            if k not in self.parity:
-                return leaf
-            shards = list(_split(leaf, self.n_shards))
-            survivors = [s for i, s in enumerate(shards) if i != lost_shard]
-            shards[lost_shard] = kops.xor_reconstruct(
-                jnp.asarray(self.parity[k]), survivors)
-            return _join(shards, leaf)
-
-        return jax.tree_util.tree_map_with_path(visit, tree)
+    # -- layout helpers ----------------------------------------------------
 
     @property
     def memory_bytes(self) -> int:
-        return sum(p.nbytes for p in self.parity.values())
+        return int(np.prod(self.buffer_shape, dtype=np.int64)) * 4
+
+    def leaves(self, tree) -> List:
+        """Covered leaves in plan-key order."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        by_key = {leaf_key(p): x for p, x in flat}
+        return [by_key[k] for k in self.keys]
+
+    def block_devices(self, key: str, blk: int) -> Tuple[int, ...]:
+        """Mesh-flat device indices holding unique block ``blk`` — where a
+        reconstructed block must be placed back (all replicas)."""
+        return tuple(i for i, b in enumerate(self.device_block[key])
+                     if b == blk)
+
+    def make_buffer(self):
+        """Zero parity buffer with the plan's device layout."""
+        z = jnp.zeros(self.buffer_shape, jnp.int32)
+        if self.mesh is not None:
+            z = jax.device_put(
+                z, NamedSharding(self.mesh, P(self.axis_names, None)))
+        return z
+
+    # -- traceable stream construction ------------------------------------
+
+    def _leaf_blocks(self, key: str, leaf) -> jnp.ndarray:
+        """(D, block_len[key]) int32 — the leaf's unique logical blocks,
+        derived from the SAME slice map the canary's shard digests use,
+        zero rows padding the shard axis (a replicated slice contributes
+        ONCE; duplicate copies would self-cancel under XOR)."""
+        c = self.block_len[key]
+        if self.slices is None:
+            flat = kref.to_i32(leaf)
+            flat = jnp.pad(flat, (0, self.n_shards * c - flat.shape[0]))
+            return flat.reshape(self.n_shards, c)
+        uniq, _ = self.slices[key]
+        rows = []
+        for idx in uniq:
+            blk = leaf[tuple(slice(a, b) for a, b in idx)]
+            row = kref.to_i32(blk)
+            if row.shape[0] < c:
+                row = jnp.pad(row, (0, c - row.shape[0]))
+            rows.append(row)
+        if len(rows) < self.n_shards:
+            rows.append(jnp.zeros((self.n_shards - len(rows), c), jnp.int32))
+            return jnp.concatenate(
+                [jnp.stack(rows[:-1]), rows[-1]], axis=0)
+        return jnp.stack(rows)
+
+    def stream_mat(self, leaves: Sequence) -> jnp.ndarray:
+        """(D, stream_len) int32: row d = shard-d's concatenated blocks."""
+        mat = jnp.concatenate(
+            [self._leaf_blocks(k, leaf)
+             for k, leaf in zip(self.keys, leaves)], axis=1)
+        if self.mesh is not None:
+            mat = jax.lax.with_sharding_constraint(
+                mat, NamedSharding(self.mesh, P(self.axis_names, None)))
+        return mat
+
+    def _to_tiles(self, mat: jnp.ndarray) -> jnp.ndarray:
+        """(D, stream_len) -> (D, nt, TILE_ROWS, LANES) (off-mesh)."""
+        pad = self.n_tiles * TILE - self.stream_len
+        return jnp.pad(mat, ((0, 0), (0, pad))).reshape(
+            self.n_shards, self.n_tiles, TILE_ROWS, LANES)
+
+    def _fold_rows(self, mat: jnp.ndarray) -> jnp.ndarray:
+        """XOR-reduce the shard axis and lay the fold out as the mesh
+        parity buffer (D, Crow) sharded over the mesh."""
+        # Unrolled elementwise XOR: XLA:CPU rejects a bitwise-xor
+        # lax.reduce computation, and D is a small static constant anyway.
+        fold = mat[0]
+        for d in range(1, mat.shape[0]):
+            fold = fold ^ mat[d]
+        pad = int(np.prod(self.buffer_shape, dtype=np.int64)) \
+            - self.stream_len
+        rows = jnp.pad(fold, (0, pad)).reshape(self.buffer_shape)
+        return jax.lax.with_sharding_constraint(
+            rows, NamedSharding(self.mesh, P(self.axis_names, None)))
+
+    # -- traceable hot-path entry points -----------------------------------
+
+    def rebuild_leaves(self, leaves: Sequence) -> jnp.ndarray:
+        """Parity from scratch — the donated-pair ``arm_current`` form
+        (only one state version is ever visible under donation, so the
+        per-step maintenance is a rebuild of the armed version)."""
+        mat = self.stream_mat(leaves)
+        if self.mesh is not None:
+            return self._fold_rows(mat)
+        return pk.xor_fold_tiles(self._to_tiles(mat),
+                                 interpret=kdigest._interpret())
+
+    def update_leaves(self, parity, old_leaves: Sequence,
+                      new_leaves: Sequence, fault) -> jnp.ndarray:
+        """Incremental update ``parity ^ XOR_d(old_d ^ new_d)``, gated:
+        when ``fault`` (the launch's own mismatch flag) fires the delta is
+        zeroed, so the committed parity keeps describing the last healthy
+        version — the gate is applied to the DELTA, not the result, so the
+        donated parity buffer is consumed exactly once (alias-safe)."""
+        delta = self.stream_mat(old_leaves) ^ self.stream_mat(new_leaves)
+        delta = jnp.where(fault, jnp.int32(0), delta)
+        if self.mesh is not None:
+            return parity ^ self._fold_rows(delta)
+        return pk.xor_update_tiles(self._to_tiles(delta), parity,
+                                   interpret=kdigest._interpret())
+
+    # -- fault path: reconstruction ---------------------------------------
+
+    def _parity_segment(self, parity, key: str) -> jnp.ndarray:
+        off = self.offsets[key]
+        flat = parity.reshape(-1)
+        return jax.lax.dynamic_slice(flat, (off,), (self.block_len[key],))
+
+    def _survivor_fold(self, parity, leaf, key: str, shard: int):
+        """parity_segment ^ XOR over the surviving blocks — the injured
+        block's exact bits (padded to block_len).  ``shard`` is a
+        unique-block id; rows past ``n_blocks[key]`` are zero padding."""
+        acc = self._parity_segment(parity, key)
+        blocks = self._leaf_blocks(key, leaf)
+        for d in range(self.n_blocks[key]):
+            if d != shard:
+                acc = acc ^ blocks[d]
+        return acc
+
+    def reconstruct_shard(self, key: str, shard: int):
+        """Compiled ``(parity, leaf) -> injured block`` (block shape, leaf
+        dtype) for a mesh leaf — cached per (key, shard), fault path only."""
+        ent = self._recon_cache.get((key, shard))
+        if ent is None:
+            bshape = self.block_shapes[key][shard]
+            bsize = self.block_sizes[key][shard]
+            dtype = self.dtypes[key]
+
+            def recon(parity, leaf):
+                acc = self._survivor_fold(parity, leaf, key, shard)
+                return kref.from_i32(acc[:bsize], jnp.zeros(bshape, dtype))
+
+            ent = jax.jit(recon)
+            self._recon_cache[(key, shard)] = ent
+        return ent
+
+    def reconstruct_leaf(self, key: str, shard: int):
+        """Compiled ``(parity, leaf) -> repaired whole leaf`` (off-mesh:
+        the injured flat chunk is spliced back into the leaf's i32 view)."""
+        ent = self._recon_cache.get((key, shard))
+        if ent is None:
+            c = self.block_len[key]
+            bsize = self.block_sizes[key][shard]
+            start = shard * c
+
+            def recon(parity, leaf):
+                acc = self._survivor_fold(parity, leaf, key, shard)
+                flat = kref.to_i32(leaf)
+                flat = jax.lax.dynamic_update_slice(
+                    flat, acc[:bsize], (start,))
+                return kref.from_i32(flat, leaf)
+
+            ent = jax.jit(recon)
+            self._recon_cache[(key, shard)] = ent
+        return ent
+
+
+_PARITY_PLAN_CACHE: Dict[Tuple, ParityPlan] = {}
+
+
+def parity_plan_for(tree, *, mesh=None, n_shards: int = 4) -> ParityPlan:
+    """The cached ParityPlan for ``tree``'s structure (and, on a mesh, its
+    actual NamedSharding layout — the slice map IS the plan)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    entries = []
+    for path, x in flat:
+        k = leaf_key(path)
+        dt = jnp.result_type(x)
+        if not _covered(k, dt):
+            continue
+        shape = tuple(jnp.shape(x))
+        if mesh is not None:
+            sharding = getattr(x, "sharding", None)
+            if not isinstance(sharding, NamedSharding):
+                raise ValueError(
+                    f"parity on a mesh requires NamedSharding leaves; "
+                    f"{k} has {type(sharding).__name__}")
+            per_dev = tuple(_norm_slices(idx, shape)
+                            for idx in kdigest.shard_indices(x))
+            # dedupe replicas in mesh-flat device order: XOR over
+            # identical copies self-cancels, so the stream carries each
+            # logical slice once; the device->block map rides along for
+            # fault-attribution translation
+            uniq: List[Tuple] = []
+            seen: Dict[Tuple, int] = {}
+            dev_to_blk = []
+            for idx in per_dev:
+                b = seen.get(idx)
+                if b is None:
+                    b = seen[idx] = len(uniq)
+                    uniq.append(idx)
+                dev_to_blk.append(b)
+            sl = (tuple(uniq), tuple(dev_to_blk))
+        else:
+            sl = None
+        entries.append((k, shape, dt.name, sl))
+    entries.sort(key=lambda e: e[0])
+    d = mesh.size if mesh is not None else max(2, n_shards)
+    key = (kdigest._mesh_key(mesh) if mesh is not None else ("host", d),
+           treedef, tuple(entries))
+    plan = _PARITY_PLAN_CACHE.get(key)
+    if plan is None:
+        plan = ParityPlan(
+            keys=tuple(k for k, _, _, _ in entries),
+            shapes={k: s for k, s, _, _ in entries},
+            dtypes={k: dt for k, _, dt, _ in entries},
+            slices={k: sl for k, _, _, sl in entries}
+            if mesh is not None else None,
+            n_shards=d, mesh=mesh)
+        _PARITY_PLAN_CACHE[key] = plan
+    return plan
+
+
+class ParityStore:
+    """The live parity shard: one device-resident buffer + a version.
+
+    Hot-path maintenance does NOT go through this object — the canary /
+    fused step embed ``plan.update_leaves`` / ``plan.rebuild_leaves`` in
+    their own launches and hand the donated-through buffer back to
+    ``commit``.  The store's own methods are the off-hot-path half:
+    ``build``/``rebuild`` after init or recovery, ``reconstruct_*`` on the
+    fault path.
+    """
+
+    def __init__(self, tree, *, ctx=None, n_shards: int = 4):
+        mesh = ctx.mesh if (ctx is not None
+                            and getattr(ctx, "enabled", False)) else None
+        self.plan = parity_plan_for(tree, mesh=mesh, n_shards=n_shards)
+        self.parity = self.plan.make_buffer()
+        self.version = -1
+
+    # -- coverage ---------------------------------------------------------
+
+    def covers(self, key: str) -> bool:
+        return key in self.plan.key_set
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+    @property
+    def memory_bytes(self) -> int:
+        return self.plan.memory_bytes
+
+    # -- off-hot-path maintenance -----------------------------------------
+
+    def build(self, tree, step: int = 0) -> None:
+        """(Re)build parity from scratch — init and post-recovery (a
+        replayed/restored state is a new version; stale parity must not
+        survive it).  One jitted call, off the hot path."""
+        plan = self.plan
+        fn = getattr(plan, "_rebuild_jit", None)
+        if fn is None:
+            fn = plan._rebuild_jit = jax.jit(plan.rebuild_leaves)
+        self.parity = fn(plan.leaves(tree))
+        self.version = step
+
+    rebuild = build
+
+    def commit(self, new_parity, step: int) -> None:
+        """Install the buffer a hot-path launch donated through."""
+        self.parity = new_parity
+        self.version = step
+
+    # -- fault path -------------------------------------------------------
+
+    def reconstruct_shard(self, leaf, key: str, shard: int):
+        """Injured mesh shard's exact bits (block shape, leaf dtype)."""
+        return self.plan.reconstruct_shard(key, shard)(self.parity, leaf)
+
+    def reconstruct_leaf(self, leaf, key: str, shard: int):
+        """Off-mesh: the leaf with the injured chunk reconstructed."""
+        return self.plan.reconstruct_leaf(key, shard)(self.parity, leaf)
+
+    def scrub(self, tree, refs: Dict[str, np.ndarray]):
+        """At-rest verify-and-repair sweep (the serving-side use: params
+        never change while serving, so one parity build at load time plus
+        this sweep detects AND repairs silent at-rest corruption with no
+        reload and no model re-shard).
+
+        ``refs`` holds the healthy digests recorded at build time —
+        per-shard rows (``host_shard_checksums``) on a mesh, one
+        whole-leaf ``host_checksum`` pair off-mesh.  Returns
+        ``(repaired_tree, stats)``; leaves whose reconstruction does not
+        digest-certify are reported in ``stats['failed']`` and left
+        untouched (exact-or-abort — the caller escalates to a reload).
+        """
+        plan = self.plan
+        on_mesh = plan.mesh is not None
+        stats = {"checked": 0, "repaired": 0, "bytes_moved": 0,
+                 "failed": []}
+        repaired: Dict[str, object] = {}
+        for key, leaf in zip(plan.keys, plan.leaves(tree)):
+            ref = refs.get(key)
+            if ref is None:
+                continue
+            stats["checked"] += 1
+            ref = np.asarray(ref)
+            if on_mesh:
+                got = kdigest.host_shard_checksums(leaf)
+                bad = np.nonzero(np.any(got != ref, axis=-1))[0]
+                if not len(bad):
+                    continue
+                blocks = sorted({plan.device_block[key][int(i)]
+                                 for i in bad})
+                if len(blocks) > 1:
+                    stats["failed"].append(key)
+                    continue
+                blk = blocks[0]
+                block = np.asarray(self.reconstruct_shard(leaf, key, blk))
+                holders = set(plan.block_devices(key, blk))
+                devs = kdigest.mesh_device_order(leaf.sharding.mesh)
+                by_dev = {sh.device: sh.data
+                          for sh in leaf.addressable_shards}
+                bufs = [jax.device_put(block, dev) if i in holders
+                        else by_dev[dev] for i, dev in enumerate(devs)]
+                new_leaf = jax.make_array_from_single_device_arrays(
+                    leaf.shape, leaf.sharding, bufs)
+                if not np.array_equal(
+                        np.asarray(kdigest.host_shard_checksums(new_leaf)),
+                        ref):
+                    stats["failed"].append(key)
+                    continue
+                stats["bytes_moved"] += block.nbytes * len(holders)
+            else:
+                if np.array_equal(
+                        np.asarray(kdigest.host_checksum(np.asarray(leaf))),
+                        ref):
+                    continue
+                new_leaf = None
+                for d in range(plan.n_blocks[key]):
+                    cand = self.reconstruct_leaf(leaf, key, d)
+                    if np.array_equal(
+                            np.asarray(
+                                kdigest.host_checksum(np.asarray(cand))),
+                            ref):
+                        new_leaf = cand
+                        stats["bytes_moved"] += 4 * plan.block_sizes[key][d]
+                        break
+                if new_leaf is None:
+                    stats["failed"].append(key)
+                    continue
+            repaired[key] = new_leaf
+            stats["repaired"] += 1
+        if not repaired:
+            return tree, stats
+        out = jax.tree_util.tree_map_with_path(
+            lambda p, x: repaired.get(leaf_key(p), x), tree)
+        return out, stats

@@ -37,7 +37,7 @@ import numpy as np
 from repro.core.detect import ChecksumCanary, FaultReport, block_of_leaf
 from repro.core.induction import IVRegistry, RecoveryAbort
 from repro.core.microcheckpoint import MicroCheckpointer
-from repro.core.parity import ParityManager
+from repro.core.parity import ParityStore
 from repro.core.recovery_table import (
     RUNG_CHECKPOINT,
     RUNG_EQ1,
@@ -79,10 +79,17 @@ class RecoveryRuntime:
     batch_fn    : pure batch_fn(step) -> batch  (index-addressable pipeline)
     iv_registry : IVRegistry from ``core.icp.promote`` (ICP output)
     micro       : MicroCheckpointer (per-step IV log + K-step snapshots)
-    parity      : optional ParityManager over the param/opt shards
+    parity      : optional ParityStore (core/parity.py) over the
+                  param/opt shards — the device-resident XOR parity the
+                  canary maintains in-launch; enables the parity_xor rung
     replicas    : optional callable step -> list of ≥2 healthy replica state
                   trees (pure-DP deployments); used by the TMR rung
     checkpoint  : optional (load_fn() -> (state, step)) — disk restore
+    canary      : optional ChecksumCanary over the same state — the parity
+                  rung localises finite flips against its reference table
+                  (per-shard digests on a mesh, trial reconstruction
+                  off-mesh) and digest-certifies every reconstruction
+                  before resume
     donated     : the loop runs its step with ``donate_argnums``: on a
                   trap the pre-step state buffers have been consumed by
                   the step and MUST NOT be touched — the ladder pivots
@@ -97,12 +104,13 @@ class RecoveryRuntime:
 
     def __init__(self, *, step_fn, batch_fn, iv_registry: IVRegistry,
                  micro: MicroCheckpointer,
-                 parity: Optional[ParityManager] = None,
+                 parity: Optional[ParityStore] = None,
                  replicas: Optional[Callable] = None,
                  checkpoint: Optional[Callable] = None,
                  table: Optional[RecoveryTable] = None,
                  donated: bool = False,
-                 shardings=None):
+                 shardings=None,
+                 canary: Optional[ChecksumCanary] = None):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.ivs = iv_registry
@@ -113,6 +121,7 @@ class RecoveryRuntime:
         self.table = table
         self.donated = donated
         self.shardings = shardings
+        self.canary = canary
         self.events: List[RecoveryEvent] = []
 
     # ------------------------------------------------------------------
@@ -153,44 +162,179 @@ class RecoveryRuntime:
         return out, f"replica vote over {len(reps)} replicas"
 
     def _rung_parity(self, state, report: FaultReport, step: int):
-        """Reconstruct the corrupted shard from XOR parity."""
-        if self.parity is None:
-            raise RecoveryAbort("no parity maintained")
-        shard = getattr(report, "shard", None)
-        if shard is None:
-            # locate the corrupt shard by digest-scanning shard slices
-            shard = self._locate_shard(state, report)
-        if shard is None:
-            raise RecoveryAbort("cannot localise corrupt shard")
-        keys = report.leaves or None
-        params = self.parity.repair(state["params"], shard, keys and [
-            k.split("params/", 1)[1] for k in keys if k.startswith("params/")])
-        out = dict(state)
-        out["params"] = params
-        return out, f"parity reconstruction of shard {shard}"
+        """Reconstruct the injured (leaf, shard) from XOR parity — the
+        snapshot-free rung: 0 host-snapshot bytes read, 0 steps replayed,
+        O(leaf_bytes/D) reconstructed.
 
-    def _locate_shard(self, state, report) -> Optional[int]:
-        """Find which parity shard of the first corrupted leaf disagrees with
-        its reference digest (only float leaves carry NaN evidence)."""
-        n = self.parity.n_shards
-        for key in report.leaves:
-            if not key.startswith("params/"):
-                continue
-            leaf = _leaf_by_key(state["params"], key[len("params/"):])
+        Covers the FULL state tree (params AND optimizer state — the seed
+        repaired only ``state["params"]``, so an opt/EMA-leaf fault
+        returned "success" with nothing repaired and burned a verify
+        round).  Applicability gates (abort → escalate, never guess):
+
+          * a parity store must be maintained and the faulting version's
+            buffers must be LIVE — an in-step fused report under donation
+            says ``consumed=True`` and aborts up front (the donated PAIR
+            protocol checks before the step consumes, so its reports keep
+            live survivors even under donation);
+          * at least one injured leaf must be parity-covered (up-front
+            RecoveryAbort otherwise — int64/float64 leaves and the IV
+            block are not covered);
+          * exactly ONE shard per injured leaf: single parity tolerates a
+            single lost component per leaf (arXiv:1309.0212), two injured
+            shards of one leaf escalate;
+          * checksum/external reports are digest-certified against the
+            canary's reference table before resume (``host_shard_checksums``
+            per shard on a mesh, whole-leaf ``host_checksum`` off-mesh);
+            an uncertifiable reconstruction aborts (exact-or-abort).
+        """
+        store = self.parity
+        if store is None:
+            raise RecoveryAbort("no parity maintained")
+        if getattr(report, "consumed", False):
+            raise RecoveryAbort(
+                "faulting version donated into the detecting step — "
+                "survivors are dead, replay instead")
+        injured = list(report.shards or ()) or list(report.leaves or ())
+        if not injured:
+            # free traps carry no leaf attribution — name suspects via the
+            # non-finite scan (the only evidence class a trap leaves)
+            injured = _default_verify(state)
+        covered = [k for k in injured if store.covers(k)]
+        if not covered:
+            raise RecoveryAbort("no injured leaf is parity-covered")
+        # the table generation the fired check compared against — NOT the
+        # current read table, which the fused protocols have already
+        # advanced past by the time the fault path runs
+        refs = self.canary.fault_reference_digests() \
+            if self.canary is not None else None
+        certifiable = report.detector in ("checksum", "external")
+        on_mesh = store.plan.mesh is not None
+        moved = [0, 0]                      # bytes reconstructed, shards
+        repaired: Dict[str, object] = {}
+        for key in covered:
+            leaf = _leaf_by_key(state, key)
             if leaf is None:
-                continue
-            arr = jnp.asarray(leaf)
-            if jnp.issubdtype(arr.dtype, jnp.floating):
-                flat = arr.reshape(-1)
-                pad = (-flat.shape[0]) % n
-                flat = jnp.pad(flat, (0, pad))
-                per = flat.shape[0] // n
-                bad = np.asarray(
-                    jnp.any(~jnp.isfinite(flat.reshape(n, per)), axis=1))
-                idx = np.nonzero(bad)[0]
-                if len(idx) == 1:
-                    return int(idx[0])
-        return None
+                raise RecoveryAbort(f"injured leaf {key} not in state")
+            shards = self._locate_shards(leaf, key, report, refs)
+            if not shards:
+                raise RecoveryAbort(
+                    f"cannot localise the injured shard of {key}")
+            if len(shards) > 1:
+                raise RecoveryAbort(
+                    f"{len(shards)} injured shards of {key} — a single "
+                    f"parity shard reconstructs exactly one")
+            d = shards[0]
+            if on_mesh:
+                # surviving devices keep their exact buffers; the
+                # reconstructed block's bytes move to EVERY device holding
+                # that logical block (all replicas — O(leaf_bytes/D) each)
+                block = np.asarray(store.reconstruct_shard(leaf, key, d))
+                sharding = leaf.sharding
+                devs = kdigest.mesh_device_order(sharding.mesh)
+                by_dev = {sh.device: sh.data
+                          for sh in leaf.addressable_shards}
+                holders = set(store.plan.block_devices(key, d))
+                bufs = [jax.device_put(block, dev) if i in holders
+                        else by_dev[dev] for i, dev in enumerate(devs)]
+                new_leaf = jax.make_array_from_single_device_arrays(
+                    leaf.shape, sharding, bufs)
+                moved[0] += block.nbytes * len(holders)
+            else:
+                new_leaf = store.reconstruct_leaf(leaf, key, d)
+                moved[0] += 4 * store.plan.block_sizes[key][d]
+            moved[1] += 1
+            if certifiable and refs is not None and key in refs:
+                got = kdigest.host_shard_checksums(new_leaf) if on_mesh \
+                    else kdigest.host_checksum(np.asarray(new_leaf))
+                if not np.array_equal(np.asarray(got),
+                                      np.asarray(refs[key])):
+                    raise RecoveryAbort(
+                        f"reconstruction of {key} shard {d} failed digest "
+                        f"certification — escalating")
+            repaired[key] = new_leaf
+
+        def swap(path, leaf):
+            return repaired.get(kops.leaf_key(path), leaf)
+
+        out = jax.tree_util.tree_map_with_path(swap, state)
+        self._last_patched_bytes = moved[0]
+        return out, (f"parity reconstruction of {moved[1]} shard(s) of "
+                     f"{len(covered)} leaf/leaves ({moved[0]} B, "
+                     f"no snapshot, no replay)")
+
+    def _locate_shards(self, leaf, key: str, report: FaultReport,
+                       refs) -> List[int]:
+        """Which unique logical block(s) of ``leaf`` are injured, in the
+        parity plan's block coordinates.  Device-coordinate evidence (the
+        sharded canary attributes per DEVICE) is translated through
+        ``plan.device_block`` — replicas of one corrupted logical slice
+        collapse to ONE injured block, which single parity CAN repair.
+
+        In order of evidence quality:
+          1. the report's own (leaf, shard) attribution (sharded canary);
+          2. per-shard uint32 digests of the live leaf against the
+             canary's reference rows (``host_shard_checksums`` — the
+             finite-bitflip case the seed's non-finite-only scan aborted
+             on);
+          3. off-mesh, where the reference is one whole-leaf digest:
+             trial reconstruction — reconstruct each candidate shard in
+             turn and keep the one whose repaired leaf matches the
+             reference (localisation, repair and certification in one
+             O(D · leaf_bytes/D) sweep).  ALL candidates are tried and a
+             unique match is required: a false candidate mirrors the XOR
+             delta into its own block at the same block-local offset, and
+             for a flip of bit b the two complementary word deltas sit
+             exactly ``block_len`` apart — Fletcher's weighted term
+             shifts by ``2^b * block_len``, which is ``0 mod 2^32``
+             whenever ``b + log2(block_len) >= 32``, so high-bit flips
+             can digest-collide.  Two matches are indistinguishable by
+             parity too (both repairs are parity-consistent), so the
+             only exact-or-abort answer is to escalate to replay;
+          4. last resort (no canary): per-block non-finite scan.
+        """
+        store = self.parity
+        dmap = store.plan.device_block[key]
+        ids = (report.shards or {}).get(key)
+        if ids:
+            return sorted({dmap[int(i)] for i in ids})
+        ref = refs.get(key) if refs else None
+        if ref is not None and store.plan.mesh is not None \
+                and np.ndim(ref) == 2:
+            got = kdigest.host_shard_checksums(leaf)
+            bad = np.nonzero(np.any(got != np.asarray(ref), axis=-1))[0]
+            if len(bad):
+                return sorted({dmap[int(i)] for i in bad})
+        if ref is not None and store.plan.mesh is None:
+            matches = [
+                d for d in range(store.plan.n_blocks[key])
+                if np.array_equal(
+                    kdigest.host_checksum(np.asarray(
+                        store.reconstruct_leaf(leaf, key, d))),
+                    np.asarray(ref))]
+            if len(matches) == 1:
+                return matches
+            if len(matches) > 1:
+                raise RecoveryAbort(
+                    f"{len(matches)} candidate shards of {key} digest-"
+                    f"certify (Fletcher collision of the XOR-mirrored "
+                    f"repair) — ambiguous, escalating")
+        if jnp.issubdtype(jnp.result_type(leaf), jnp.floating):
+            if store.plan.mesh is None:
+                flat = jnp.asarray(leaf).reshape(-1)
+                c = store.plan.block_len[key]
+                flat = jnp.pad(flat, (0, store.n_shards * c - flat.shape[0]))
+                bad = np.asarray(jnp.any(
+                    ~jnp.isfinite(flat.reshape(store.n_shards, c)), axis=1))
+            else:
+                uniq, _ = store.plan.slices[key]
+                bad = np.asarray([
+                    bool(jnp.any(~jnp.isfinite(
+                        leaf[tuple(slice(a, b) for a, b in idx)])))
+                    for idx in uniq])
+            idx = np.nonzero(bad)[0]
+            if len(idx):
+                return [int(i) for i in idx]
+        return []
 
     def _rung_shard_patch(self, state, report: FaultReport, step: int):
         """Restore ONLY the injured shards' addressable bytes (mesh loops).
@@ -360,8 +504,18 @@ class RecoveryRuntime:
             # the pre-step state was donated into the step — there are no
             # live buffers for the in-place rungs (Eq.(1), TMR, parity,
             # shard patch) to read or repair: pivot straight to snapshot +
-            # IV replay
-            return [RUNG_REPLAY, RUNG_CHECKPOINT]
+            # IV replay.  ONE exception: the donated-PAIR protocol checks
+            # the buffer BEFORE the step consumes it, so a checksum report
+            # with ``consumed=False`` still has live survivors — the
+            # parity rung can reconstruct the injured shard in place with
+            # no snapshot and no replay (in-step fused reports under
+            # donation say ``consumed=True`` and skip it).
+            ladder = [RUNG_REPLAY, RUNG_CHECKPOINT]
+            if (self.parity is not None
+                    and report.detector in ("checksum", "external")
+                    and not getattr(report, "consumed", False)):
+                ladder.insert(0, RUNG_PARITY)
+            return ladder
         if self.table is not None and report.leaves:
             entry = self.table.lookup(report.leaves[0])
             if entry is not None:

@@ -39,3 +39,36 @@ def xor_fold_tiles(x, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((nt, TILE_ROWS, LANES), jnp.int32),
         interpret=interpret,
     )(x)
+
+
+def _xor_update_kernel(x_ref, p_ref, out_ref):
+    """x_ref: (D, 1, TILE_ROWS, LANES) deltas; p_ref: the parity tile."""
+    acc = p_ref[0]
+    for d in range(x_ref.shape[0]):
+        acc = acc ^ x_ref[d, 0]
+    out_ref[0] = acc
+
+
+def xor_update_tiles(x, parity, *, interpret: bool = True):
+    """Incremental parity update: ``parity ^ XOR_d x[d]``.
+
+    ``x``: (D, nt, TILE_ROWS, LANES) int32 per-shard delta tiles
+    (``old_shard XOR new_shard``), ``parity``: (nt, TILE_ROWS, LANES)
+    int32 — the live parity rides the launch in place
+    (``input_output_aliases``), so the steady-state update allocates
+    nothing.  ``xor_update_tiles(x, zeros)`` is a rebuild-from-scratch
+    fold, which is what makes incremental == rebuild testable bit-exactly
+    (XOR is associative/commutative with identity 0).
+    """
+    D, nt = x.shape[0], x.shape[1]
+    return pl.pallas_call(
+        _xor_update_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((D, 1, TILE_ROWS, LANES),
+                               lambda i: (0, i, 0, 0)),
+                  pl.BlockSpec((1, TILE_ROWS, LANES), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, TILE_ROWS, LANES), jnp.int32),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(x, parity)

@@ -61,7 +61,8 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
           seed: int = 0, inject_every: int = 0, verbose: bool = True,
           canary_slices: int = 4, donate: bool = False,
           fused_detect: bool = False, mesh=None, n_slots: int = 0,
-          paged=None, block_size: int = 8, prefill_chunk: int = 0):
+          paged=None, block_size: int = 8, prefill_chunk: int = 0,
+          parity: bool = False):
     """Serve ``n_requests`` random prompts through the continuous-batching
     engine; returns the engine summary dict.
 
@@ -71,6 +72,13 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
     path — slot eviction + prefix replay — is what gets exercised.
     ``fused_detect`` is accepted for CLI compatibility: the engine step is
     always in-step fused.
+
+    ``parity=True`` adds at-rest protection for the STATIC params: one
+    XOR parity build at load time (1/D memory), then an end-of-run
+    ``scrub_params`` sweep that detects and repairs silent weight rot in
+    O(bytes/D) without reloading the checkpoint.  With ``inject_every``
+    set, one param bit is also flipped after the run so the smoke
+    exercises the repair (reported under ``"parity"`` in the summary).
     """
     del fused_detect  # engine detection is always in-step fused
     # one seed, every RNG: stdlib `random` (injection storm), numpy
@@ -93,11 +101,17 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen_tokens: int,
         # serve() promises every request completes (prefix replay always
         # works) — the drop bound is an SLO-benchmark knob, not a CLI one
         max_replays=10**6, verbose=verbose, paged=paged,
-        block_size=block_size, prefill_chunk=prefill_chunk)
+        block_size=block_size, prefill_chunk=prefill_chunk, parity=parity)
     reqs = make_requests(cfg, n_requests, prompt_len, gen_tokens, nprng)
     eng.warm()
     rep = eng.run(reqs, inject_every=inject_every, inject_rng=rng)
     out = rep.summary()
+    if parity:
+        if inject_every:
+            # at-rest weight-rot adversary: flip one param bit after the
+            # run so the scrub below demonstrates detection + XOR repair
+            eng.corrupt_param(rng)
+        out["parity"] = eng.scrub_params()
     if verbose:
         print(json.dumps(out, indent=1))
     return out
@@ -137,6 +151,11 @@ def main():
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=8); params shard, the slot cache "
                          "replicates, the canary goes shard-local")
+    ap.add_argument("--parity", action="store_true",
+                    help="at-rest XOR parity over the static params (1/D "
+                         "memory): an end-of-run scrub detects and "
+                         "repairs silent weight rot in O(bytes/D) with "
+                         "no checkpoint reload")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -147,7 +166,8 @@ def main():
           canary_slices=args.canary_slices, donate=args.donate,
           fused_detect=args.fused_detect, mesh=args.mesh,
           n_slots=args.slots, paged=False if args.dense else None,
-          block_size=args.block_size, prefill_chunk=args.prefill_chunk)
+          block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+          parity=args.parity)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ from repro.core import (
     ChecksumCanary,
     FaultReport,
     MicroCheckpointer,
+    ParityStore,
     RecoveryFailed,
     RecoveryRuntime,
     inject,
@@ -95,7 +96,7 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           canary_slices: int = 4, detectors: bool = True,
           donate: bool = False, fused_detect: bool = False,
           fused_warm: str = "eager", mesh: Optional[str] = None,
-          verbose: bool = True) -> Dict:
+          parity: bool = False, verbose: bool = True) -> Dict:
     """Run the recovery-wrapped loop; returns the loop report dict.
 
     ``donate=True`` is the production compilation setting: the step is
@@ -126,6 +127,18 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     snapshots carry per-(leaf, shard) digests, and recovery gains the
     shard_patch rung (restore only the injured shard's addressable
     bytes).  Composes with ``donate``/``fused_detect`` unchanged.
+
+    ``parity=True`` maintains a device-resident XOR parity shard over the
+    full state tree (params AND optimizer moments; core/parity.py), kept
+    current by the same launch that runs the canary check/arm — no extra
+    dispatch, no host traffic.  On a (leaf, shard) fault the recovery
+    ladder gains the ``parity_xor`` rung: the injured shard is rebuilt
+    from surviving peers + parity in O(bytes/D), digest-certified, with
+    zero host-snapshot bytes read and zero replay steps.  Memory cost is
+    1/D of the covered state (each device holds 1/D of the parity under
+    ``mesh``).  Requires ``detectors=True`` — parity maintenance rides
+    the canary's launches and reconstruction certifies against its
+    reference digests.
     """
     key = jax.random.PRNGKey(seed)
     pipe = TokenPipeline(cfg.model.vocab_size, seq_len, global_batch,
@@ -152,13 +165,22 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     ckpt = CheckpointManager(checkpoint_dir,
                              interval=checkpoint_interval) \
         if checkpoint_dir else None
+    canary = ChecksumCanary(state, n_slices=canary_slices, ctx=ctx) \
+        if detectors else None
+    pstore = None
+    if parity:
+        if canary is None:
+            raise ValueError("parity requires detectors=True (parity "
+                             "maintenance rides the canary's launches and "
+                             "reconstruction certifies against its digests)")
+        pstore = ParityStore(state, ctx=ctx)
+        pstore.build(state)
+        canary.attach_parity(pstore)
     runtime = RecoveryRuntime(
         step_fn=step_fn,
         batch_fn=bfn, iv_registry=promote(cfg, global_batch), micro=micro,
-        checkpoint=ckpt.loader(state) if ckpt else None,
-        donated=donate, shardings=shardings)
-    canary = ChecksumCanary(state, n_slices=canary_slices, ctx=ctx) \
-        if detectors else None
+        parity=pstore, checkpoint=ckpt.loader(state) if ckpt else None,
+        donated=donate, shardings=shardings, canary=canary)
     fused = None
     if fused_detect:
         if canary is None:
@@ -263,6 +285,10 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             rep.recovery_ms.append(1e3 * (time.perf_counter() - t0))
             if canary is not None:
                 canary.refresh(state)
+            if pstore is not None:
+                # recovery may have produced a whole new state version
+                # (replay/checkpoint rungs); re-anchor the parity to it
+                pstore.rebuild(state, s)
             if verbose:
                 print(f"[train] recovered via {ev.rung} in "
                       f"{rep.recovery_ms[-1]:.1f} ms")
@@ -275,6 +301,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
                 # restored state == new reference; stale digests would
                 # fire a spurious checksum fault on the next step
                 canary.refresh(state)
+            if pstore is not None:
+                pstore.rebuild(state, ck_step)
             if verbose:
                 print(f"[train] cold restore to step {ck_step}")
 
@@ -321,6 +349,11 @@ def main():
                          "--xla_force_host_platform_device_count=8); "
                          "detection goes shard-local, recovery gains the "
                          "shard_patch rung")
+    ap.add_argument("--parity", action="store_true",
+                    help="keep a device-resident XOR parity shard over the "
+                         "full state (1/D memory), updated by the canary's "
+                         "own launch; recovery gains the parity_xor rung "
+                         "(snapshot-free O(bytes/D) shard reconstruction)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -336,7 +369,8 @@ def main():
                 donate=args.donate,
                 fused_detect=args.fused_detect,
                 fused_warm=args.fused_warm,
-                mesh=args.mesh)
+                mesh=args.mesh,
+                parity=args.parity)
     print(json.dumps(out, indent=1) if args.json else out)
 
 

@@ -214,7 +214,7 @@ class ServingEngine:
                  ctx=None, seed: int = 0, max_replays: int = 8,
                  verbose: bool = False, paged: Optional[bool] = None,
                  block_size: int = 8, prefill_chunk: int = 0,
-                 pool_blocks: int = 0):
+                 pool_blocks: int = 0, parity: bool = False):
         self.cfg = cfg
         self.m = cfg.model
         self.model = get_model(self.m)
@@ -237,6 +237,24 @@ class ServingEngine:
             params = jax.device_put(params, psh)
             self._repl = NamedSharding(self.ctx.mesh, PartitionSpec())
         self.params = params
+
+        # at-rest parity over the STATIC params (core/parity.py): serving
+        # never mutates them, so one build at load time + healthy digests
+        # recorded here let `scrub_params` detect and repair silent
+        # at-rest corruption in O(bytes/D) with no weight reload
+        self.parity_store = None
+        self._param_refs: Optional[Dict[str, np.ndarray]] = None
+        if parity:
+            from repro.core.parity import ParityStore
+            self.parity_store = ParityStore(params, ctx=self.ctx)
+            self.parity_store.build(params)
+            plan = self.parity_store.plan
+            on_mesh = plan.mesh is not None
+            self._param_refs = {
+                k: (np.asarray(kdigest.host_shard_checksums(leaf))
+                    if on_mesh
+                    else np.asarray(kdigest.host_checksum(np.asarray(leaf))))
+                for k, leaf in zip(plan.keys, plan.leaves(params))}
 
         # paged-mode resolution: auto-detect unless forced off
         self.paged = False
@@ -1089,6 +1107,49 @@ class ServingEngine:
         if rid is not None:
             self.report.injured_rids.add(rid)
         return u, k, b
+
+    def corrupt_param(self, rng, key: Optional[str] = None,
+                      bit: Optional[int] = None) -> Tuple[str, int]:
+        """Flip one bit of one element of a parity-covered PARAM leaf —
+        the at-rest weight-rot adversary `scrub_params` exists for.
+        Preserves the leaf's device layout.  Returns (leaf key, bit)."""
+        if self.parity_store is None:
+            raise ValueError("corrupt_param requires parity=True")
+        plan = self.parity_store.plan
+        if key is None:
+            key = plan.keys[rng.randrange(len(plan.keys))]
+        leaves = dict(zip(plan.keys, plan.leaves(self.params)))
+        leaf = leaves[key]
+        size = max(1, int(np.prod(leaf.shape, dtype=np.int64)))
+        e = rng.randrange(size)
+        width = _BIT_WIDTH.get(str(leaf.dtype), 32)
+        b = bit if bit is not None else rng.randrange(width)
+        flipped = flip_bit(leaf, e, b)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            flipped = jax.device_put(flipped, sharding)
+        self.params = jax.tree_util.tree_map_with_path(
+            lambda p, x: flipped if leaf_key(p) == key else x, self.params)
+        self.report.faults_injected += 1
+        return key, b
+
+    def scrub_params(self) -> Dict:
+        """At-rest integrity sweep over the params: verify every covered
+        leaf against the load-time digests and XOR-reconstruct any
+        injured shard from parity + survivors (no reload, no re-shard,
+        O(bytes/D) moved).  Returns the scrub stats; repaired params are
+        installed in place so subsequent decode steps use healthy
+        weights."""
+        if self.parity_store is None:
+            raise ValueError("scrub_params requires parity=True")
+        new_params, stats = self.parity_store.scrub(
+            self.params, self._param_refs)
+        if stats["repaired"]:
+            self.params = new_params
+            self.report.faults_detected += stats["repaired"]
+            self.report.faults_recovered += stats["repaired"]
+        stats["memory_bytes"] = self.parity_store.memory_bytes
+        return stats
 
     def _owned_unit_keys(self, u: int) -> List[str]:
         """All canary plan keys a slot currently owns: its blocks' units

@@ -47,7 +47,7 @@ import pytest
 
 from benchmarks._campaign import Campaign, summarize
 from repro.core import InjectionPlan
-from repro.core.recovery_table import RUNG_EQ1, RUNG_REPLAY
+from repro.core.recovery_table import RUNG_EQ1, RUNG_PARITY, RUNG_REPLAY
 
 pytestmark = pytest.mark.slow
 
@@ -179,6 +179,56 @@ def test_donated_and_stock_loops_agree_bitwise(campaign):
     for s in range(TOTAL_STEPS):
         state, _ = dstep(state, campaign.bfn(s))
     assert campaign._digest(state) == campaign.final_digest
+
+
+def test_parity_regime_repairs_low_bit_flip(campaign):
+    """Donated pair + XOR parity (the acceptance path): a low-mantissa
+    flip — finite, loss-invisible, localisable without digest-collision
+    ambiguity — must repair via the snapshot-free parity rung: 0 steps
+    replayed, O(bytes/D) moved, bit-exact continuation."""
+    plan = InjectionPlan("groups/0/0/ffn/up/w", 1000, 5, 3, "params")
+    trial = campaign.run_trial(random.Random(0), plan=plan, canary_slices=1,
+                               parity=True, donate=True)
+    assert trial.outcome == "crash" and trial.detector == "checksum", trial
+    assert trial.recovered and trial.exact, trial
+    assert trial.rung == RUNG_PARITY, trial
+    assert trial.replayed == 0, trial
+    assert trial.bytes_moved > 0, trial
+    assert trial.latency_steps == 0, trial
+
+
+def test_parity_sweep_exact_with_snapshot_free_repairs(campaign):
+    """Sampled donated sweep with parity: every detected crash recovers
+    bit-exactly; the rung is parity_xor wherever the injury certifies
+    uniquely, and escalates to replay otherwise (a high-bit flip can
+    Fletcher-collide with its XOR-mirrored repair — exact-or-abort)."""
+    trials = campaign.run(6, target="params", seed=3, parity=True,
+                          donate=True)
+    crashes = [t for t in trials if t.outcome == "crash"]
+    assert crashes, "sweep produced no detected crash"
+    for t in crashes:
+        assert t.recovered and t.exact, t
+        assert t.rung in (RUNG_PARITY, RUNG_REPLAY), t
+        if t.rung == RUNG_PARITY:
+            assert t.replayed == 0 and t.bytes_moved > 0, t
+    assert any(t.rung == RUNG_PARITY for t in crashes), crashes
+
+
+def test_parity_fused_regimes(campaign):
+    """In-step fused detection + parity: the NON-donated fused loop keeps
+    live survivors, so parity repairs in place; the fused DONATED loop's
+    report says consumed=True (the detecting launch ate the faulting
+    buffers) and must pivot to snapshot+replay unconditionally."""
+    plan = InjectionPlan("groups/0/0/ffn/up/w", 1000, 5, 3, "params")
+    live = campaign.run_trial(random.Random(0), plan=plan, canary_slices=1,
+                              parity=True, fused=True)
+    assert live.outcome == "crash" and live.recovered and live.exact, live
+    assert live.rung == RUNG_PARITY, live
+
+    dead = campaign.run_trial(random.Random(0), plan=plan, canary_slices=1,
+                              parity=True, donate=True, fused=True)
+    assert dead.outcome == "crash" and dead.recovered and dead.exact, dead
+    assert dead.rung == RUNG_REPLAY, dead
 
 
 def test_care_mode_rejects_donation(campaign):

@@ -13,7 +13,7 @@ from repro.core import (
     ChecksumCanary,
     FaultReport,
     MicroCheckpointer,
-    ParityManager,
+    ParityStore,
     RecoveryFailed,
     RecoveryRuntime,
     RecoveryTable,
@@ -119,23 +119,28 @@ def test_replica_vote_rung(tiny_setup):
 def test_parity_rung_reconstructs_lost_shard(tiny_setup):
     cfg, state0, step, bfn = tiny_setup
     state = _advance(step, bfn, state0, 0, 2)
-    pm = ParityManager(n_shards=4)
-    pm.build(state["params"])
-    rt, micro = _runtime(tiny_setup, parity=pm)
+    ps = ParityStore(state)                 # covers the FULL state tree
+    ps.build(state, 2)
+    rt, micro = _runtime(tiny_setup, parity=ps)
 
-    # NaN out shard 2 of one leaf (a lost device's slice)
-    leaf_key = "embed/table"
+    # wipe EXACTLY parity block 1 of one leaf (a lost device's slice):
+    # the plan's own block boundaries define what "one shard" means
+    key = "params/embed/table"
     table = state["params"]["embed"]["table"]
-    n = table.shape[0]
-    lo, hi = n // 2, 3 * n // 4
-    bad_table = table.at[lo:hi].set(jnp.nan)
+    csum = np.cumsum((0,) + ps.plan.block_sizes[key])
+    lo, hi = int(csum[1]), min(int(csum[2]), table.size)
+    flat = np.asarray(table).ravel().copy()
+    flat[lo:hi] = np.nan
+    bad_table = jnp.asarray(flat.reshape(table.shape))
     bad = dict(state, params=dict(state["params"],
                                   embed={"table": bad_table}))
 
     fixed, ev = rt.recover(bad, FaultReport(2, "external",
-                                            leaves=["params/" + leaf_key]),
+                                            leaves=[key]),
                            2, ladder=["parity_xor"])
     assert ev.rung == "parity_xor"
+    assert ev.steps_replayed == 0
+    assert ev.bytes_moved > 0
     assert np.array_equal(np.asarray(fixed["params"]["embed"]["table"]),
                           np.asarray(table))
 
