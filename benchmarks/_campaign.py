@@ -179,7 +179,8 @@ class Campaign:
                   plan: Optional[InjectionPlan] = None,
                   donate: bool = False,
                   fused: bool = False,
-                  parity: bool = False) -> Trial:
+                  parity: bool = False,
+                  triage: bool = False) -> Trial:
         """One injection trial.
 
         ``plan``   : fixed InjectionPlan (its ``step`` is the injection
@@ -201,11 +202,17 @@ class Campaign:
                      for checksum-attributed faults.  Under fused+donated
                      detection the faulting version is consumed by the
                      detecting launch, so those trials still replay.
+        ``triage`` : enable recovery rung 0 (implies ``use_canary``):
+                     checksum faults are classified against the canary's
+                     reference digest pair and certified-harmless flips
+                     are tolerated in place (rung ``triage``, zero bytes,
+                     zero replay); uncertifiable faults escalate down the
+                     unchanged ladder.
         """
         if mode == "care" and donate:
             raise ValueError("care mode diagnoses the live IV block and is "
                              "not defined for a donated loop")
-        if fused or parity:
+        if fused or parity or triage:
             use_canary = True
         if plan is None:
             tgt = target or rng.choices(["params", "opt", "iv"],
@@ -318,12 +325,13 @@ class Campaign:
                                   micro=micro, parity=pstore,
                                   checkpoint=lambda: (self.states[0], 0),
                                   donated=donate, shardings=self.shardings,
-                                  canary=canary)
+                                  canary=canary, triage=triage)
         ladder = None
         if mode == "care":
             # CARE cannot repair loop state: if any IV is corrupted the RSI
             # has no intact loop state to replay over -> unrecoverable.
-            iv_vals = {k: int(v) for k, v in state["iv"].items()}
+            # (registry keys are full leaf paths — prefix the live values)
+            iv_vals = {f"iv/{k}": int(v) for k, v in state["iv"].items()}
             _, bad = promote(self.cfg, self.B).diagnose(iv_vals)
             if bad:
                 trial.recovered = False
@@ -354,12 +362,12 @@ class Campaign:
             target: Optional[str] = None, seed: int = 1,
             use_canary: bool = False, canary_slices: int = 4,
             donate: bool = False, fused: bool = False,
-            parity: bool = False) -> List[Trial]:
+            parity: bool = False, triage: bool = False) -> List[Trial]:
         rng = random.Random(seed)
         return [self.run_trial(rng, mode=mode, target=target,
                                use_canary=use_canary,
                                canary_slices=canary_slices, donate=donate,
-                               fused=fused, parity=parity)
+                               fused=fused, parity=parity, triage=triage)
                 for _ in range(n_trials)]
 
 

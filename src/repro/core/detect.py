@@ -646,3 +646,13 @@ class ChecksumCanary:
             table = self.reference
         table = kdigest.fetch(table)
         return {k: table[..., i, :] for i, k in enumerate(self._keys)}
+
+    def fault_reference_digest(self, key: str) -> np.ndarray:
+        """Single-leaf row of ``fault_reference_digests`` — the reference
+        pair the triage rung solves ``kernels.digest.locate_single_flip``
+        against (int32[2], or (n_shards, 2) on a sharded canary)."""
+        table = self._fault_reference
+        if table is None:
+            table = self.reference
+        table = kdigest.fetch(table)
+        return table[..., self.plan.index_of(key), :]

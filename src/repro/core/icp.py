@@ -16,6 +16,18 @@ IVRegistry so Eq. (1) applies.
 ``promote`` is the framework's ICP entry point: given the loop description
 (global batch, microbatch count), it returns the registry of independent
 IVs — the moral equivalent of running Algorithm 1 over the loop body.
+
+Registry keys are FULL train-state leaf paths (``iv/step``, ``opt/t``, …)
+so the recovery runtime can match a ``FaultReport``'s injured leaves against
+the registry directly.  Two fragments are merged:
+
+* the loop's own counters under ``iv/`` (``derived_counters`` +
+  ``optim.schedules.induction_specs`` for the schedule position);
+* the optimizer-owned induction state under ``opt/`` — the step counter
+  ``t`` as an affine IV, and bias-correction / decay factors as *derived*
+  entries recomputable from the consensus iteration (an ICP-exposed side
+  effect: because the affine counters are independent, the consensus n is
+  always available to recompute any pure function of it in place).
 """
 
 from __future__ import annotations
@@ -23,6 +35,8 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 from repro.core.induction import IVRegistry
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import induction_specs as schedule_induction_specs
 
 
 def derived_counters(global_batch: int, n_micro: int) -> Dict[str, Tuple[int, int]]:
@@ -31,19 +45,35 @@ def derived_counters(global_batch: int, n_micro: int) -> Dict[str, Tuple[int, in
     Before ICP these would be *expressions* over ``step``; after ICP each is
     independent loop state with the same affine semantics.
     """
-    return {
+    counters = {
         "step": (0, 1),
         "data_offset": (0, global_batch),
         "rng_counter": (0, 1),
-        "sched_pos": (0, 1),
         "micro_count": (0, max(n_micro, 1)),
     }
+    counters.update(schedule_induction_specs())
+    return counters
+
+
+def optimizer_iv_specs(arch_cfg):
+    """(affine, derived) optimizer-state induction specs, keyed by full
+    ``opt/…`` leaf path — exported by the optimizer that owns the state."""
+    opt = make_optimizer(arch_cfg.train)
+    affine = {f"opt/{name}": spec for name, spec in opt.affine_ivs.items()}
+    derived = {f"opt/{name}": fn for name, fn in opt.derived_ivs.items()}
+    return affine, derived
 
 
 def promote(arch_cfg, global_batch: int) -> IVRegistry:
-    """ICP: emit the independent-IV registry for this training loop."""
+    """ICP: emit the independent-IV registry for this training loop,
+    covering both the ``iv/`` counter block and the optimizer's own
+    induction state (keys are full train-state leaf paths)."""
     n_micro = max(arch_cfg.train.microbatch, 1)
-    return IVRegistry(derived_counters(global_batch, n_micro))
+    specs = {f"iv/{name}": spec
+             for name, spec in derived_counters(global_batch, n_micro).items()}
+    opt_affine, opt_derived = optimizer_iv_specs(arch_cfg)
+    specs.update(opt_affine)
+    return IVRegistry(specs, derived=opt_derived)
 
 
 def recoverable_iv_count(arch_cfg, global_batch: int,
@@ -53,8 +83,8 @@ def recoverable_iv_count(arch_cfg, global_batch: int,
     Without ICP only ``step`` exists as true loop state (everything else is
     derived from it), so a corruption of the one counter has *no partner* to
     recover from: 0 recoverable.  With ICP every promoted counter has ≥1
-    independent partner: all are recoverable.
+    independent partner, and every derived optimizer entry is recomputable
+    from the consensus: all are recoverable.
     """
-    n = len(derived_counters(global_batch,
-                             max(arch_cfg.train.microbatch, 1)))
-    return n if icp_enabled else 0
+    reg = promote(arch_cfg, global_batch)
+    return len(reg.specs) + len(reg.derived) if icp_enabled else 0

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from collections import Counter
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -45,25 +45,62 @@ class IVSpec:
 
 
 class IVRegistry:
-    """The Recovery-Table fragment for induction variables."""
+    """The Recovery-Table fragment for induction variables.
 
-    def __init__(self, specs: Dict[str, Tuple[int, int]]):
-        """specs: name -> (init, step)."""
+    Two entry classes:
+
+    * **affine** (``specs``): counters following ``x(n) = init + n*step`` —
+      the Eq. (1) family.  These vote in ``diagnose`` and repair each other.
+    * **derived** (``derived``): values that are not affine in n but are a
+      pure function of it (bias-correction factors ``1 - beta^n``,
+      Adafactor's decay ``1 - n^-0.8``, …).  They carry no vote — a flip in
+      one is repaired by recomputing ``derived[name](n*)`` from the affine
+      consensus iteration.
+    """
+
+    def __init__(self, specs: Dict[str, Tuple[int, int]],
+                 derived: Optional[Dict[str, Callable[[int], object]]] = None):
+        """specs: name -> (init, step); derived: name -> fn(n) -> value."""
         self.specs: Dict[str, IVSpec] = {
             name: IVSpec(name, int(init), int(step))
             for name, (init, step) in specs.items()
         }
+        self.derived: Dict[str, Callable[[int], object]] = dict(derived or {})
         if not self.specs:
             raise ValueError("empty IV registry")
+        overlap = set(self.specs) & set(self.derived)
+        if overlap:
+            raise ValueError(f"IV names both affine and derived: {overlap}")
 
     # -- Eq. (1): pairwise recovery ----------------------------------------
 
     def eq1(self, target: str, partner: str, partner_value: int) -> int:
-        """Recover ``target``'s value from a healthy ``partner`` value."""
+        """Recover ``target``'s value from a healthy ``partner`` value.
+
+        Exact-or-abort: a partner whose value has a non-zero residue mod its
+        step is NOT on its affine family — it is itself corrupted, and
+        "repairing" from it would manufacture a silently wrong value.
+        """
         ps = self.specs[partner]
         ts = self.specs[target]
-        n = (int(partner_value) - ps.init) // ps.step
+        if ps.step == 0:
+            raise RecoveryAbort(f"partner {partner} has zero step")
+        n, r = divmod(int(partner_value) - ps.init, ps.step)
+        if r != 0:
+            raise RecoveryAbort(
+                f"partner {partner}={int(partner_value)} is off its affine "
+                f"family (residue {r} mod step {ps.step}) — refusing Eq.(1)")
         return ts.init + n * ts.step
+
+    # -- derived entries -----------------------------------------------------
+
+    def is_derived(self, name: str) -> bool:
+        return name in self.derived
+
+    def derived_value(self, name: str, n: int):
+        """Recompute a derived entry at consensus iteration ``n`` — the
+        exact expression the optimizer update writes at state version n."""
+        return self.derived[name](int(n))
 
     # -- majority diagnosis --------------------------------------------------
 

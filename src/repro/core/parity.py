@@ -77,9 +77,12 @@ _INVERTIBLE = tuple(map(jnp.dtype, (
     jnp.int8, jnp.uint8)))
 
 
-def _covered(key: str, dtype) -> bool:
-    """Parity coverage: params + optimizer state (everything but the IV
-    block, which Eq.(1) repairs for free) in invertible dtypes."""
+def _covered(key: str, dtype, shape=None) -> bool:
+    """Parity coverage: params + optimizer state (everything but induction
+    state, which Eq.(1) repairs for free — the ``iv`` block and the 0-d
+    optimizer counters ``opt/t``/bias corrections) in invertible dtypes."""
+    if shape is not None and tuple(shape) == ():
+        return False
     return not key.startswith("iv") and jnp.dtype(dtype) in _INVERTIBLE
 
 
@@ -342,7 +345,7 @@ def parity_plan_for(tree, *, mesh=None, n_shards: int = 4) -> ParityPlan:
     for path, x in flat:
         k = leaf_key(path)
         dt = jnp.result_type(x)
-        if not _covered(k, dt):
+        if not _covered(k, dt, jnp.shape(x)):
             continue
         shape = tuple(jnp.shape(x))
         if mesh is not None:

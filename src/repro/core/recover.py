@@ -9,7 +9,17 @@ This runtime wraps a training loop the same way: it does *nothing* until a
 ``FaultReport`` arrives (from a detector or from an external signal such as
 a device loss), then walks the leaf's recovery ladder:
 
-    rung 1  eq1           IV partner recovery (Eq. (1), ns)
+    rung 0  triage        FlipTracker-style classification BEFORE any
+                          repair: localise the flip from the digest pair
+                          and TOLERATE it (re-arm the digests, zero work)
+                          when a certificate proves it harmless — dead
+                          (never-read) bytes or a below-epsilon mantissa
+                          perturbation in an EMA moment
+    rung 1  eq1 / opt_iv  induction-state partner recovery (Eq. (1), ns):
+                          the ``iv`` counter block AND the optimizer-owned
+                          induction leaves (step counter ``t`` affine,
+                          bias-correction/decay factors recomputed from
+                          the consensus iteration)
     rung 2  shard_patch   restore ONLY the injured shard's addressable
                           bytes from a version-matched, digest-certified
                           micro-snapshot (mesh loops; DESIGN.md §5)
@@ -41,15 +51,25 @@ from repro.core.parity import ParityStore
 from repro.core.recovery_table import (
     RUNG_CHECKPOINT,
     RUNG_EQ1,
+    RUNG_OPT_IV,
     RUNG_PARITY,
     RUNG_REPLAY,
     RUNG_REPLICA,
     RUNG_SHARD,
+    RUNG_TRIAGE,
     RecoveryTable,
 )
 from repro.core.replay import device_put_like, replay
 from repro.kernels import digest as kdigest
 from repro.kernels import ops as kops
+from repro.optim.optimizers import QBLOCK
+
+#: triage epsilon certificate: a mantissa perturbation of an EMA moment is
+#: tolerable when |new - old| <= max(REL_EPS * max(|old|, |new|), ABS_FLOOR)
+#: — the induced relative error in the update direction is of the same
+#: order, far below the optimizer's own stochastic noise floor.
+TRIAGE_REL_EPS = 1e-5
+TRIAGE_ABS_FLOOR = 1e-12
 
 
 @dataclass
@@ -100,6 +120,12 @@ class RecoveryRuntime:
                   loops) — places replayed snapshots back on the mesh
                   when donation left no live reference, each device
                   receiving only its addressable slice
+    triage      : enable rung 0 — classify the injured (leaf, shard)
+                  against the canary's reference digest pair BEFORE any
+                  repair, and tolerate certified-harmless flips in place
+                  (zero bytes moved, zero steps replayed).  Requires a
+                  canary; only checksum reports with live buffers are
+                  classifiable, everything else falls straight through
     """
 
     def __init__(self, *, step_fn, batch_fn, iv_registry: IVRegistry,
@@ -110,7 +136,8 @@ class RecoveryRuntime:
                  table: Optional[RecoveryTable] = None,
                  donated: bool = False,
                  shardings=None,
-                 canary: Optional[ChecksumCanary] = None):
+                 canary: Optional[ChecksumCanary] = None,
+                 triage: bool = False):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.ivs = iv_registry
@@ -122,6 +149,7 @@ class RecoveryRuntime:
         self.donated = donated
         self.shardings = shardings
         self.canary = canary
+        self.triage = triage
         self.events: List[RecoveryEvent] = []
 
     # ------------------------------------------------------------------
@@ -129,17 +157,252 @@ class RecoveryRuntime:
     # RecoveryAbort; the ladder driver verifies and escalates.
     # ------------------------------------------------------------------
 
+    def _induction_leaf(self, state, name: str):
+        """The live leaf a full-path registry key names (``iv/…`` resolves
+        into the counter block, anything else through the state tree)."""
+        if name.startswith("iv/"):
+            return state.get("iv", {}).get(name[3:])
+        return _leaf_by_key(state, name)
+
     def _rung_eq1(self, state, report: FaultReport, step: int):
-        """Repair corrupted IV counters from healthy partners (Eq. (1))."""
-        iv = {k: int(v) for k, v in state["iv"].items()}
-        fixed, bad = self.ivs.recover(iv)          # raises RecoveryAbort
-        if not bad:
-            raise RecoveryAbort("IV block consistent — fault is elsewhere")
-        new_iv = {k: jnp.asarray(v, jnp.asarray(state["iv"][k]).dtype)
-                  for k, v in fixed.items()}
+        """Repair corrupted induction state from healthy partners.
+
+        Registered as BOTH the ``eq1`` and ``opt_iv`` rungs (the Recovery
+        Table decides which name a leaf's ladder advertises): one Eq. (1)
+        majority diagnosis runs over every affine counter the registry
+        knows — the ``iv`` block AND the optimizer-owned step counter —
+        then (a) affine outliers are rewritten to their family value at
+        the consensus iteration n*, and (b) derived entries (bias
+        corrections, Adafactor decay) whose stored bits disagree with the
+        recomputation at n* are rewritten in place.  All of it is scalar
+        arithmetic: zero snapshot bytes, zero replayed steps.
+        """
+        vals: Dict[str, int] = {}
+        for name in self.ivs.specs:
+            leaf = self._induction_leaf(state, name)
+            if leaf is not None:
+                vals[name] = int(leaf)
+        if not vals:
+            raise RecoveryAbort("no registered induction leaves in state")
+        n_star, bad = self.ivs.diagnose(vals)
+        if n_star is None:
+            raise RecoveryAbort("no consensus among induction variables")
+        derived_bad: List[str] = []
+        for name in self.ivs.derived:
+            leaf = self._induction_leaf(state, name)
+            if leaf is None:
+                continue
+            have = np.asarray(leaf)
+            want = np.asarray(self.ivs.derived_value(name, n_star),
+                              have.dtype)
+            if have.tobytes() != want.tobytes():   # bit compare, not value
+                derived_bad.append(name)
+        if not bad and not derived_bad:
+            raise RecoveryAbort(
+                "induction state consistent — fault is elsewhere")
         out = dict(state)
+        new_iv = dict(state["iv"])
+        swap: Dict[str, object] = {}
+        for name in bad:
+            v = self.ivs.specs[name].value_at(n_star)
+            if name.startswith("iv/"):
+                k = name[3:]
+                new_iv[k] = jnp.asarray(v, jnp.asarray(state["iv"][k]).dtype)
+            else:
+                leaf = self._induction_leaf(state, name)
+                swap[name] = jnp.asarray(v, jnp.asarray(leaf).dtype)
+        for name in derived_bad:
+            leaf = self._induction_leaf(state, name)
+            swap[name] = jnp.asarray(self.ivs.derived_value(name, n_star),
+                                     jnp.asarray(leaf).dtype)
         out["iv"] = new_iv
-        return out, f"repaired {bad} via Eq.(1) consensus"
+        if swap:
+            out = jax.tree_util.tree_map_with_path(
+                lambda path, leaf: swap.get(kops.leaf_key(path), leaf), out)
+        repaired = sorted(bad) + sorted(derived_bad)
+        return out, (f"repaired {repaired} via Eq.(1) consensus n={n_star}"
+                     + (f" (derived recompute: {sorted(derived_bad)})"
+                        if derived_bad else ""))
+
+    # -- rung 0: triage -------------------------------------------------
+
+    def _rung_triage(self, state, report: FaultReport, step: int):
+        """Classify the injured (leaf, shard) BEFORE any repair and
+        tolerate certified-harmless flips in place (FlipTracker, arXiv:
+        1809.01362).  Single-event-upset fault model: the Fletcher digest
+        pair the canary already holds is an error-locating code for one
+        flipped bit, so triage can name the (bit, word) coordinates and
+        the implied pre-flip bits with no second copy of the data.
+
+        Certificates (EVERY injured leaf must certify, else abort):
+
+          * dead region — the flip landed on bytes the update never reads
+            (int8-quantised moment pad tail; the absmax scale of an
+            all-pad block): bitwise harmless, and the next update rewrites
+            them wholesale;
+          * below-epsilon moment perturbation — a mantissa-tail flip in a
+            float EMA moment whose old/new values differ by at most
+            ``TRIAGE_REL_EPS`` relative: the induced update-direction
+            error is of the same order and decays geometrically under the
+            EMA, far below the optimizer's stochastic noise floor.
+
+        Tolerate = re-arm the digest table rows to the tolerated bits
+        (``canary.refresh(keys=…)`` patches BOTH generations without a
+        bump) and resume with the state untouched — zero bytes moved,
+        zero steps replayed.  Anything uncertifiable (multi-word damage,
+        exponent-scale perturbations, non-moment leaves) escalates:
+        exact-or-abort is preserved because tolerate never ALTERS state,
+        it only re-certifies it.
+        """
+        if not self.triage:
+            raise RecoveryAbort("triage disabled")
+        if self.canary is None:
+            raise RecoveryAbort("triage needs a canary digest reference")
+        if report.detector != "checksum":
+            raise RecoveryAbort(
+                "only digest-attributed faults are classifiable")
+        if getattr(report, "consumed", False):
+            raise RecoveryAbort(
+                "faulting buffers donated into the step — nothing to "
+                "classify in place")
+        injured = list(report.leaves or ())
+        if not injured:
+            raise RecoveryAbort("no leaf attribution to classify")
+        notes = []
+        for key in injured:
+            leaf = _leaf_by_key(state, key)
+            if leaf is None:
+                raise RecoveryAbort(f"injured leaf {key} not in state")
+            notes.append(f"{key}: "
+                         f"{self._certify_tolerable(state, key, leaf)}")
+        # tolerate MUST re-arm: the digest rows still describe the
+        # pre-flip bits, so without this every later check would re-fire
+        # on a value we have decided to live with (partial refresh — both
+        # generations patched, no bump, unrelated rows untouched)
+        self.canary.refresh(state, keys=injured)
+        return state, "tolerated without repair — " + "; ".join(notes)
+
+    def _certify_tolerable(self, state, key: str, leaf) -> str:
+        """Certificate check for one injured leaf; returns the tolerance
+        note or raises RecoveryAbort."""
+        host = np.asarray(leaf)
+        bit, cands = self._localise_flip(key, leaf, host)
+        if all(self._dead_element(state, key, j) for j, _, _ in cands):
+            return (f"dead-region flip (bit {bit}, "
+                    f"{len(cands)} candidate word(s), never read)")
+        if not self._moment_leaf(key):
+            raise RecoveryAbort(
+                f"{key} is not an EMA moment — no tolerance certificate")
+        worst = 0.0
+        for j, cur_w, old_w in cands:
+            if self._dead_element(state, key, j):
+                continue
+            new_v = _word_value(host.dtype, cur_w)
+            old_v = _word_value(host.dtype, old_w)
+            if not (np.isfinite(new_v) and np.isfinite(old_v)):
+                raise RecoveryAbort(
+                    f"{key}: non-finite endpoint at word {j} — escalate")
+            delta = abs(new_v - old_v)
+            tol = max(TRIAGE_REL_EPS * max(abs(new_v), abs(old_v)),
+                      TRIAGE_ABS_FLOOR)
+            if delta > tol:
+                raise RecoveryAbort(
+                    f"{key}: |Δ|={delta:.3e} at word {j} exceeds the "
+                    f"epsilon certificate ({tol:.3e}) — escalate")
+            worst = max(worst, delta)
+        return (f"sub-epsilon moment perturbation (bit {bit}, "
+                f"|Δ|≤{worst:.3e})")
+
+    def _localise_flip(self, key: str, leaf, host: np.ndarray):
+        """(bit, [(flat_element, cur_word, old_word), …]) for the single
+        flip the digest-pair evidence implies, or RecoveryAbort when the
+        evidence is inconsistent with any single-bit flip.  ``to_i32``
+        packs one word per element for every supported dtype, so word
+        index == flat element index (shard-local indices are translated
+        to leaf-flat coordinates on a mesh)."""
+        ref = np.asarray(self.canary.fault_reference_digest(key))
+        if ref.ndim == 2:                       # sharded canary rows
+            cur_rows = kdigest.host_shard_checksums(leaf)
+            idxs = kdigest.shard_indices(leaf)
+            seen, mismatch = set(), []
+            for d, idx in enumerate(idxs):
+                sig = tuple((sl.start, sl.stop) for sl in idx)
+                if sig in seen:                 # replicated slice
+                    continue
+                seen.add(sig)
+                if not np.array_equal(cur_rows[d], ref[d]):
+                    mismatch.append((d, idx))
+            if not mismatch:
+                raise RecoveryAbort(
+                    f"{key}: shard digests match the reference — stale "
+                    f"attribution")
+            if len(mismatch) > 1:
+                raise RecoveryAbort(
+                    f"{key}: {len(mismatch)} shards mismatch — more than "
+                    f"one event, escalate")
+            d, idx = mismatch[0]
+            sub = np.ascontiguousarray(host[idx])
+            words = kdigest._host_i32(sub).view(np.uint32)
+            sol = kdigest.locate_single_flip(ref[d], cur_rows[d],
+                                             words.size)
+            if sol is None:
+                raise RecoveryAbort(
+                    f"{key} shard {d}: digest deltas inconsistent with a "
+                    f"single-bit flip — escalate")
+            bit, delta, local = sol
+            starts = [0 if sl.start is None else int(sl.start)
+                      for sl in idx]
+            out = []
+            for j in local:
+                multi = np.unravel_index(j, sub.shape) if sub.shape else ()
+                g = tuple(int(a) + s for a, s in zip(multi, starts))
+                gflat = int(np.ravel_multi_index(g, host.shape)) \
+                    if host.shape else 0
+                cur_w = int(words[j])
+                out.append((gflat, cur_w, (cur_w - delta) & 0xFFFFFFFF))
+            return bit, out
+        words = kdigest._host_i32(host).view(np.uint32)
+        cur = kdigest.host_checksum(host)
+        if np.array_equal(cur, ref):
+            raise RecoveryAbort(
+                f"{key}: digest matches the reference — stale attribution")
+        sol = kdigest.locate_single_flip(ref, cur, words.size)
+        if sol is None:
+            raise RecoveryAbort(
+                f"{key}: digest deltas inconsistent with a single-bit "
+                f"flip — escalate")
+        bit, delta, cand = sol
+        return bit, [(j, int(words[j]),
+                      (int(words[j]) - delta) & 0xFFFFFFFF) for j in cand]
+
+    @staticmethod
+    def _moment_leaf(key: str) -> bool:
+        """Float EMA-moment leaves — the only state the epsilon
+        certificate applies to (params/IVs always escalate)."""
+        return key.startswith(("opt/m/", "opt/v/", "opt/stats/")) \
+            and not key.endswith("/q")
+
+    def _dead_element(self, state, key: str, j: int) -> bool:
+        """Is flat element ``j`` of ``key`` dead — bytes the optimizer
+        update never reads and rewrites wholesale each step?  True for
+        the int8-quantised moment pad tail (``_q8`` pads to QBLOCK;
+        ``_dq8`` slices the logical size back out) and for the absmax
+        scale of an all-pad block."""
+        base = None
+        for pre in ("opt/m/", "opt/v/"):
+            if key.startswith(pre):
+                base = key[len(pre):]
+                break
+        if base is None:
+            return False
+        if base.endswith("/q"):
+            p = _leaf_by_key(state, "params/" + base[:-len("/q")])
+            return p is not None and j >= int(np.prod(jnp.shape(p)))
+        if base.endswith("/scale"):
+            p = _leaf_by_key(state, "params/" + base[:-len("/scale")])
+            return p is not None and \
+                j * QBLOCK >= int(np.prod(jnp.shape(p)))
+        return False
 
     def _rung_replica(self, state, report: FaultReport, step: int):
         """Bitwise TMR vote across DP replicas of the corrupted leaves."""
@@ -435,7 +698,9 @@ class RecoveryRuntime:
         return res.state, f"restored step {ck_step} + replayed to {step}"
 
     _RUNGS = {
+        RUNG_TRIAGE: _rung_triage,
         RUNG_EQ1: _rung_eq1,
+        RUNG_OPT_IV: _rung_eq1,     # same consensus engine, opt-IV ladder
         RUNG_SHARD: _rung_shard_patch,
         RUNG_REPLICA: _rung_replica,
         RUNG_PARITY: _rung_parity,
@@ -515,6 +780,11 @@ class RecoveryRuntime:
                     and report.detector in ("checksum", "external")
                     and not getattr(report, "consumed", False)):
                 ladder.insert(0, RUNG_PARITY)
+            if self._triage_applies(report):
+                # the donated-PAIR protocol checks before the step
+                # consumes, so its reports still have live bytes to
+                # classify — triage rides ahead of parity/replay
+                ladder.insert(0, RUNG_TRIAGE)
             return ladder
         if self.table is not None and report.leaves:
             entry = self.table.lookup(report.leaves[0])
@@ -522,6 +792,12 @@ class RecoveryRuntime:
                 return list(entry.ladder)
         if report.leaves and all(k.startswith("iv/") for k in report.leaves):
             return [RUNG_EQ1, RUNG_REPLAY, RUNG_CHECKPOINT]
+        if report.leaves and all(
+                k in self.ivs.specs or k in self.ivs.derived
+                for k in report.leaves):
+            # optimizer-owned induction leaves (opt/t, bias corrections):
+            # the opt-IV branch of the same Eq. (1) consensus engine
+            return [RUNG_OPT_IV, RUNG_REPLAY, RUNG_CHECKPOINT]
         ladder = [RUNG_EQ1, RUNG_REPLICA, RUNG_PARITY, RUNG_REPLAY,
                   RUNG_CHECKPOINT]
         if getattr(report, "shards", None):
@@ -529,7 +805,17 @@ class RecoveryRuntime:
             # its gates (version match, shard certification) abort cleanly
             # into the generic ladder when it does not apply
             ladder.insert(0, RUNG_SHARD)
+        if self._triage_applies(report):
+            ladder.insert(0, RUNG_TRIAGE)
         return ladder
+
+    def _triage_applies(self, report: FaultReport) -> bool:
+        """Rung 0 gate: enabled, a canary to certify against, digest
+        attribution, and live (un-donated) buffers to classify."""
+        return (self.triage and self.canary is not None
+                and report.detector == "checksum"
+                and not getattr(report, "consumed", False)
+                and bool(report.leaves))
 
     # -- telemetry -------------------------------------------------------
 
@@ -642,6 +928,18 @@ def plan_serving_recovery(report: FaultReport, *, n_slices: int,
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
+
+def _word_value(dtype, word: int) -> float:
+    """Decode a packed ``to_i32`` word back to the float it encodes (the
+    triage epsilon certificate compares old/new VALUES, not bits)."""
+    dt = np.dtype(dtype)
+    if dt.itemsize == 4:
+        return float(np.array([word & 0xFFFFFFFF],
+                              np.uint32).view(np.float32)[0])
+    if dt.itemsize == 2:
+        return float(np.array([word & 0xFFFF], np.uint16).view(dt)[0])
+    raise RecoveryAbort(f"no value decoding for dtype {dt}")
+
 
 def _leaf_by_key(tree, key: str):
     found = [None]

@@ -22,7 +22,9 @@ import numpy as np
 from repro.kernels.ops import leaf_key
 
 
+RUNG_TRIAGE = "triage"           # rung 0: classify + tolerate (no repair)
 RUNG_EQ1 = "eq1"                 # induction-variable partner recovery
+RUNG_OPT_IV = "opt_iv"           # optimizer-state induction repair (Eq.(1))
 RUNG_SHARD = "shard_patch"       # restore only the injured shard's bytes
 RUNG_REPLICA = "replica_vote"    # TMR vote across DP replicas
 RUNG_PARITY = "parity_xor"       # XOR parity reconstruction
@@ -45,7 +47,9 @@ class RecoveryTable:
 
     @classmethod
     def build(cls, state, *, replicated: bool = False,
-              parity: bool = False, sharded: bool = False) -> "RecoveryTable":
+              parity: bool = False, sharded: bool = False,
+              triage: bool = False,
+              opt_ivs: Tuple[str, ...] = ()) -> "RecoveryTable":
         """Construct the table for a train state.
 
         replicated: DP replica copies exist (pure-DP leaves) -> replica rung
@@ -58,9 +62,21 @@ class RecoveryTable:
                     (leaf, shard) attribution, when the state was donated
                     or when no version-matched snapshot exists), so
                     listing it here is safe for trap-detected faults too.
+        triage:     a canary maintains digest references and the runtime
+                    runs with ``triage=True`` -> rung 0 (classify +
+                    tolerate) leads every non-induction ladder.  Like
+                    shard_patch it self-gates at recovery time (aborts
+                    into the rest of the ladder when no certificate
+                    holds), so listing it is always safe.
+        opt_ivs:    full paths of optimizer-owned induction leaves
+                    (``core.icp.promote`` registry keys under ``opt/``):
+                    their ladder leads with the opt_iv branch of the
+                    Eq. (1) consensus engine, partnered by the whole
+                    induction registry, instead of paying replay.
         """
         entries: Dict[str, TableEntry] = {}
         iv_names = sorted(state.get("iv", {}))
+        opt_iv_set = set(opt_ivs)
 
         def visit(path, leaf):
             key = leaf_key(path)
@@ -70,8 +86,15 @@ class RecoveryTable:
                                  if f"iv/{n}" != key)
                 ladder = (RUNG_EQ1, RUNG_REPLAY, RUNG_CHECKPOINT)
                 params = partners
+            elif key in opt_iv_set:
+                partners = tuple(f"iv/{n}" for n in iv_names) + tuple(
+                    k for k in sorted(opt_iv_set) if k != key)
+                ladder = (RUNG_OPT_IV, RUNG_REPLAY, RUNG_CHECKPOINT)
+                params = partners
             else:
                 rungs: List[str] = []
+                if triage:
+                    rungs.append(RUNG_TRIAGE)
                 if sharded:
                     rungs.append(RUNG_SHARD)
                 if replicated:

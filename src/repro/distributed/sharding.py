@@ -236,6 +236,9 @@ def opt_state_specs(ctx: DistContext, params, pspecs, train_plan):
       fsdp axes when divisible, else replicate.
     * Adafactor: vr drops the last dim's spec entry, vc drops the
       second-to-last (factored stats follow their surviving dims).
+    * Optimizer-owned induction scalars (``t``, bias corrections / decay)
+      are replicated like the ``iv`` block — they're repaired via the
+      opt-IV Eq. (1) path, not patched.
     """
     if train_plan.optimizer == "adafactor":
         def fact(p, s):
@@ -244,16 +247,18 @@ def opt_state_specs(ctx: DistContext, params, pspecs, train_plan):
                 return {"vr": P(*dims[:-1]),
                         "vc": P(*(dims[:-2] + dims[-1:]))}
             return {"v": P(*dims)}
-        return {"stats": jax.tree_util.tree_map(fact, params, pspecs)}
+        return {"stats": jax.tree_util.tree_map(fact, params, pspecs),
+                "t": P(), "beta2": P()}
 
+    adamw_iv = {"t": P(), "bc1": P(), "bc2": P()}
     if train_plan.moment_dtype == "int8":
         def q8spec(p, s):
             del s
             return {"q": P(None, None), "scale": P(None, None)}
         one = jax.tree_util.tree_map(q8spec, params, pspecs)
-        return {"m": one, "v": one}
+        return {"m": one, "v": one, **adamw_iv}
 
-    return {"m": pspecs, "v": pspecs}
+    return {"m": pspecs, "v": pspecs, **adamw_iv}
 
 
 def batch_specs(ctx: DistContext, batch):

@@ -775,3 +775,57 @@ def host_shard_checksums(x) -> np.ndarray:
     re-fetches the device.)"""
     host = np.asarray(x)
     return np.stack([host_checksum(host[idx]) for idx in shard_indices(x)])
+
+
+# ---------------------------------------------------------------------------
+# single-flip localisation — triage's certificate engine.  The Fletcher pair
+# (s1, s2) over a leaf's packed words is an error-locating code for the
+# single-bit-flip channel: one flipped bit b in word j shifts the digests by
+#
+#     delta1 = s1' - s1 = d            (mod 2^32),   d = +-2^b
+#     delta2 = s2' - s2 = (j + 1) * d  (mod 2^32)
+#
+# so the (bit, word) coordinates of the flip are solvable from the reference
+# digest the canary already holds — no second copy of the data needed.
+# ---------------------------------------------------------------------------
+
+def _inv_odd_u32(w: int) -> int:
+    """Multiplicative inverse of odd ``w`` mod 2^32 (Newton iteration)."""
+    inv = w & 0xFFFFFFFF
+    for _ in range(5):
+        inv = (inv * (2 - w * inv)) & 0xFFFFFFFF
+    return inv
+
+
+def locate_single_flip(ref_pair, cur_pair, n_words: int):
+    """Solve the digest pair for a single flipped bit.
+
+    Args: reference and current int32[2] digests of the same leaf (or
+    shard slice) and the packed word count.  Returns ``(bit, delta,
+    candidates)`` — the flipped bit index, the mod-2^32 word delta
+    (``old_word = (cur_word - delta) & 0xFFFFFFFF``), and the candidate
+    flat word indices j (several only when ``n_words > 2^(32-bit)``) — or
+    ``None`` when the deltas are inconsistent with EVERY single-bit flip
+    (multi-word or multi-bit damage: the caller must escalate).
+    """
+    ref = np.asarray(ref_pair).view(np.uint32).reshape(-1)
+    cur = np.asarray(cur_pair).view(np.uint32).reshape(-1)
+    d1 = int((int(cur[0]) - int(ref[0])) & 0xFFFFFFFF)
+    d2 = int((int(cur[1]) - int(ref[1])) & 0xFFFFFFFF)
+    if d1 == 0:
+        return None  # a single flip always moves s1 by a non-zero +-2^b
+    bit = (d1 & -d1).bit_length() - 1  # trailing zeros of d1
+    w = d1 >> bit
+    # d = +2^b gives w = 1; d = -2^b mod 2^32 gives w = 2^(32-b) - 1
+    if w not in (1, (1 << (32 - bit)) - 1):
+        return None
+    q = (d2 * _inv_odd_u32(w)) & 0xFFFFFFFF
+    if q & ((1 << bit) - 1):
+        return None  # (j+1)*2^b must have b low zero bits
+    m = q >> bit  # j + 1 mod 2^(32-bit)
+    period = 1 << (32 - bit)
+    first = m if m != 0 else period
+    candidates = [j1 - 1 for j1 in range(first, n_words + 1, period)]
+    if not candidates:
+        return None
+    return bit, d1, candidates

@@ -96,7 +96,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           canary_slices: int = 4, detectors: bool = True,
           donate: bool = False, fused_detect: bool = False,
           fused_warm: str = "eager", mesh: Optional[str] = None,
-          parity: bool = False, verbose: bool = True) -> Dict:
+          parity: bool = False, triage: bool = False,
+          verbose: bool = True) -> Dict:
     """Run the recovery-wrapped loop; returns the loop report dict.
 
     ``donate=True`` is the production compilation setting: the step is
@@ -139,6 +140,16 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     ``mesh``).  Requires ``detectors=True`` — parity maintenance rides
     the canary's launches and reconstruction certifies against its
     reference digests.
+
+    ``triage=True`` enables recovery rung 0 (``core/recover.py``):
+    checksum-attributed faults are classified against the canary's
+    reference digest pair BEFORE any repair, and certified-harmless flips
+    (dead int8-moment pad bytes, below-epsilon EMA-moment mantissa
+    perturbations) are tolerated in place — the digest rows are re-armed
+    to the tolerated bits and the loop resumes with zero bytes moved and
+    zero replayed steps.  Strictly fault-path-only: the steady state
+    keeps the same 1-launch/1-sync/0-retrace contract (asserted by
+    ``benchmarks/overhead.py``).  Requires ``detectors=True``.
     """
     key = jax.random.PRNGKey(seed)
     pipe = TokenPipeline(cfg.model.vocab_size, seq_len, global_batch,
@@ -176,11 +187,14 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
         pstore = ParityStore(state, ctx=ctx)
         pstore.build(state)
         canary.attach_parity(pstore)
+    if triage and canary is None:
+        raise ValueError("triage requires detectors=True (rung 0 "
+                         "classifies against the canary's digest pair)")
     runtime = RecoveryRuntime(
         step_fn=step_fn,
         batch_fn=bfn, iv_registry=promote(cfg, global_batch), micro=micro,
         parity=pstore, checkpoint=ckpt.loader(state) if ckpt else None,
-        donated=donate, shardings=shardings, canary=canary)
+        donated=donate, shardings=shardings, canary=canary, triage=triage)
     fused = None
     if fused_detect:
         if canary is None:
@@ -331,6 +345,10 @@ def main():
                     choices=["params", "opt", "iv"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--snapshot-interval", type=int, default=8)
+    ap.add_argument("--canary-slices", type=int, default=4,
+                    help="canary rotation period K (1 = digest the whole "
+                         "state every step: deterministic same-step "
+                         "detection, K× the streaming bytes)")
     ap.add_argument("--donate", action="store_true",
                     help="jit the step with donate_argnums=(0,) — the "
                          "production in-place-update setting; recovery "
@@ -354,6 +372,13 @@ def main():
                          "full state (1/D memory), updated by the canary's "
                          "own launch; recovery gains the parity_xor rung "
                          "(snapshot-free O(bytes/D) shard reconstruction)")
+    ap.add_argument("--triage", action="store_true",
+                    help="enable recovery rung 0: classify checksum faults "
+                         "against the canary's digest pair and tolerate "
+                         "certified-harmless flips in place (dead bytes, "
+                         "sub-epsilon moment perturbations) — zero bytes "
+                         "moved, zero replay; uncertifiable faults "
+                         "escalate unchanged")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -366,11 +391,13 @@ def main():
                 checkpoint_dir=args.ckpt_dir,
                 inject_every=args.inject,
                 inject_target=args.inject_target,
+                canary_slices=args.canary_slices,
                 donate=args.donate,
                 fused_detect=args.fused_detect,
                 fused_warm=args.fused_warm,
                 mesh=args.mesh,
-                parity=args.parity)
+                parity=args.parity,
+                triage=args.triage)
     print(json.dumps(out, indent=1) if args.json else out)
 
 

@@ -14,7 +14,7 @@ participates in the IterPro recovery ladder like any other train-state leaf.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Tuple
 
 import jax
@@ -64,9 +64,22 @@ def _decode_moment(m, dtype: str, shape=None):
 
 @dataclass(frozen=True)
 class Optimizer:
+    """Optimizer + the induction specs for the state it owns.
+
+    ``affine_ivs``/``derived_ivs`` export the optimizer-state counters to the
+    Recovery Table (``core/icp.py`` mounts them under ``opt/``): ``affine_ivs``
+    maps leaf name -> (init, step) for counters on an affine family (the step
+    counter ``t``), ``derived_ivs`` maps leaf name -> fn(n) recomputing a
+    value that is a pure function of the consensus iteration (bias-correction
+    factors, Adafactor's decay).  The fns MUST reproduce bit-exactly the
+    expression ``update`` writes at state version n — Eq. (1) repair of
+    optimizer state is certified against the digest table afterwards.
+    """
     init: Callable
     update: Callable  # (grads, state, params, step) -> (params, state, stats)
     name: str = "opt"
+    affine_ivs: Dict[str, Tuple[int, int]] = field(default_factory=dict)
+    derived_ivs: Dict[str, Callable] = field(default_factory=dict)
 
 
 def global_norm(tree):
@@ -93,7 +106,13 @@ def adamw(lr_fn, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
             z = jnp.zeros(p.shape, jnp.float32)
             return _encode_moment(z, moment_dtype)
         return {"m": jax.tree_util.tree_map(zeros_like_m, params),
-                "v": jax.tree_util.tree_map(zeros_like_m, params)}
+                "v": jax.tree_util.tree_map(zeros_like_m, params),
+                # optimizer-owned induction state (ICP): t is an affine IV
+                # (+1 per update), bc1/bc2 are derived from it.  At version
+                # n=0 both corrections are 1 - beta^0 = 0.
+                "t": jnp.zeros((), jnp.int32),
+                "bc1": jnp.zeros((), jnp.float32),
+                "bc2": jnp.zeros((), jnp.float32)}
 
     def update(grads, state, params, step):
         if grad_clip:
@@ -101,7 +120,10 @@ def adamw(lr_fn, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
         else:
             gn = global_norm(grads)
         lr = lr_fn(step)
-        t = jnp.asarray(step, jnp.float32) + 1.0
+        # bias corrections advance from the optimizer's OWN counter — kept
+        # independent of the loop's sched_pos so Eq. (1) has partners
+        new_t = state["t"] + 1
+        t = new_t.astype(jnp.float32)
         bc1 = 1.0 - b1 ** t
         bc2 = 1.0 - b2 ** t
 
@@ -137,9 +159,20 @@ def adamw(lr_fn, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
         new_p = tdef.unflatten([o[0] for o in outs])
         new_m = tdef.unflatten([o[1] for o in outs])
         new_v = tdef.unflatten([o[2] for o in outs])
-        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gn, "lr": lr}
+        new_state = {"m": new_m, "v": new_v,
+                     "t": new_t, "bc1": bc1, "bc2": bc2}
+        return new_p, new_state, {"grad_norm": gn, "lr": lr}
 
-    return Optimizer(init=init, update=update, name="adamw")
+    def _bc(beta):
+        def fn(n):
+            # the exact expression `update` writes at version n (f32 pow)
+            return jnp.asarray(
+                1.0 - beta ** jnp.asarray(n, jnp.float32), jnp.float32)
+        return fn
+
+    return Optimizer(init=init, update=update, name="adamw",
+                     affine_ivs={"t": (0, 1)},
+                     derived_ivs={"bc1": _bc(b1), "bc2": _bc(b2)})
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +193,11 @@ def adafactor(lr_fn, *, decay=0.8, eps=1e-30, clip_threshold=1.0,
                 return {"vr": jnp.zeros(p.shape[:-1], stat_dt),
                         "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], stat_dt)}
             return {"v": jnp.zeros(p.shape, stat_dt)}
-        return {"stats": jax.tree_util.tree_map(stats, params)}
+        return {"stats": jax.tree_util.tree_map(stats, params),
+                # optimizer-owned induction state (ICP); beta2 at n=0 is a
+                # placeholder (never read before the first update)
+                "t": jnp.zeros((), jnp.int32),
+                "beta2": jnp.zeros((), jnp.float32)}
 
     def update(grads, state, params, step):
         if grad_clip:
@@ -168,7 +205,8 @@ def adafactor(lr_fn, *, decay=0.8, eps=1e-30, clip_threshold=1.0,
         else:
             gn = global_norm(grads)
         lr = lr_fn(step)
-        t = jnp.asarray(step, jnp.float32) + 1.0
+        new_t = state["t"] + 1
+        t = new_t.astype(jnp.float32)
         beta2 = 1.0 - t ** (-decay)
 
         def upd(g, s, p):
@@ -202,9 +240,18 @@ def adafactor(lr_fn, *, decay=0.8, eps=1e-30, clip_threshold=1.0,
         outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
         new_p = tdef.unflatten([o[0] for o in outs])
         new_s = tdef.unflatten([o[1] for o in outs])
-        return new_p, {"stats": new_s}, {"grad_norm": gn, "lr": lr}
+        new_state = {"stats": new_s, "t": new_t, "beta2": beta2}
+        return new_p, new_state, {"grad_norm": gn, "lr": lr}
 
-    return Optimizer(init=init, update=update, name="adafactor")
+    def _beta2(n):
+        if n == 0:
+            return jnp.zeros((), jnp.float32)  # the init placeholder
+        return jnp.asarray(
+            1.0 - jnp.asarray(n, jnp.float32) ** (-decay), jnp.float32)
+
+    return Optimizer(init=init, update=update, name="adafactor",
+                     affine_ivs={"t": (0, 1)},
+                     derived_ivs={"beta2": _beta2})
 
 
 def make_optimizer(train_plan, total_steps: int = 100_000) -> Optimizer:

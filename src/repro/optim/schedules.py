@@ -10,6 +10,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def induction_specs(start_step: int = 0):
+    """Affine induction spec for the state the schedule owns: the schedule
+    position advances +1 per outer step from ``start_step``.  Consumed by
+    ``core/icp.promote`` when it assembles the Recovery-Table IV registry
+    (the leaf lives at ``iv/sched_pos`` in the train state)."""
+    return {"sched_pos": (int(start_step), 1)}
+
+
 def warmup_cosine(peak_lr: float, warmup_steps: int,
                   total_steps: int = 100_000, floor: float = 0.1):
     def lr(step):

@@ -13,6 +13,13 @@ training loop.  Because every counter is an affine function of the iteration
 index with known (init, step) — registered in ``core/induction.py`` — any
 single corrupted counter is recoverable from any healthy partner via the
 paper's Eq. (1).
+
+The optimizer state carries its OWN induction block to the same end: the
+step counter ``opt/t`` advances by its own ``+1`` inside ``opt.update``
+(never derived from ``iv/sched_pos``, so the two are independent Eq. (1)
+partners), and the bias-correction/decay scalars stored next to it are pure
+functions of ``t`` that the opt-IV rung recomputes from the consensus
+iteration (``core/icp.promote`` exports both under full leaf paths).
 """
 
 from __future__ import annotations

@@ -29,6 +29,13 @@ Ground-truth reasoning per plan (tiny iterpro-100m smoke config, seed 0):
   Eq. (1) partner rung — and the DONATED ladder must pivot to the
   in-HBM snapshot + replay rung unconditionally (the pre-step state was
   consumed by the step).
+* ``opt-t-b3`` — bit 3 of the optimizer's own step counter ``opt/t``
+  (2 → 10): the shifted bias corrections are loss-invisible at this
+  horizon (benign under free traps), but the counter is an affine member
+  of the induction registry — the canary localises the flip to
+  ``opt/t`` and the opt_iv branch of the Eq. (1) consensus engine
+  repairs it in place: rung ≤ 1, ZERO snapshot bytes, ZERO replayed
+  steps.  Donation pivots to replay exactly like the iv case.
 
 All crashes must recover to a BIT-EXACT trajectory (trial.exact): the
 continued run equals the never-faulted run bit for bit.
@@ -47,7 +54,13 @@ import pytest
 
 from benchmarks._campaign import Campaign, summarize
 from repro.core import InjectionPlan
-from repro.core.recovery_table import RUNG_EQ1, RUNG_PARITY, RUNG_REPLAY
+from repro.core.recovery_table import (
+    RUNG_EQ1,
+    RUNG_OPT_IV,
+    RUNG_PARITY,
+    RUNG_REPLAY,
+    RUNG_TRIAGE,
+)
 
 pytestmark = pytest.mark.slow
 
@@ -89,6 +102,11 @@ CASES = [
      InjectionPlan("step", 0, 12, 2, "iv"),
      {"traps":   ("benign", "", False, False, ""),
       "canary":  ("crash", "checksum", True, True, RUNG_EQ1),
+      "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
+    ("opt-t-b3",
+     InjectionPlan("t", 0, 3, 2, "opt"),
+     {"traps":   ("benign", "", False, False, ""),
+      "canary":  ("crash", "checksum", True, True, RUNG_OPT_IV),
       "donated": ("crash", "checksum", True, True, RUNG_REPLAY)}),
 ]
 
@@ -136,22 +154,22 @@ def test_classifier_aggregate_matches_ground_truth(campaign):
     rng = random.Random(0)
     traps = summarize([campaign.run_trial(rng, plan=p, use_canary=False)
                        for _, p, _ in CASES])
-    assert traps["outcomes"] == {"crash": 1, "sdc": 1, "benign": 2}
+    assert traps["outcomes"] == {"crash": 1, "sdc": 1, "benign": 3}
     assert traps["outcomes"].get("hang", 0) == 0
     assert traps["crash_symptoms"] == {"nonfinite": 1}
 
     canary = summarize([campaign.run_trial(rng, plan=p, use_canary=True,
                                            canary_slices=1)
                         for _, p, _ in CASES])
-    assert canary["outcomes"] == {"crash": 4}
-    assert canary["recovered"] == 4
-    assert canary["exact"] == 4 and canary["exact_rate"] == 1.0
+    assert canary["outcomes"] == {"crash": 5}
+    assert canary["recovered"] == 5
+    assert canary["exact"] == 5 and canary["exact_rate"] == 1.0
 
     donated = summarize([campaign.run_trial(rng, plan=p, use_canary=True,
                                             canary_slices=1, donate=True)
                          for _, p, _ in CASES])
-    assert donated["outcomes"] == {"crash": 4}
-    assert donated["recovered"] == 4 and donated["exact"] == 4
+    assert donated["outcomes"] == {"crash": 5}
+    assert donated["recovered"] == 5 and donated["exact"] == 5
     # the donated ladder NEVER uses an in-place rung — unconditional
     # pivot to the in-HBM snapshot + replay
     assert set(donated["by_rung"]) == {RUNG_REPLAY}
@@ -236,3 +254,61 @@ def test_care_mode_rejects_donation(campaign):
     consumed it; the campaign must refuse the combination loudly."""
     with pytest.raises(ValueError):
         campaign.run_trial(random.Random(0), mode="care", donate=True)
+
+
+def test_opt_state_flip_stays_on_rung_one(campaign):
+    """The acceptance criterion, asserted end to end: an optimizer-state
+    counter flip is recovered at rung <= 1 (eq1/opt_iv) — zero snapshot
+    bytes read, zero replayed steps — and the continued trajectory is
+    bit-exact."""
+    plan = InjectionPlan("t", 0, 3, 2, "opt")
+    trial = campaign.run_trial(random.Random(0), plan=plan, use_canary=True,
+                               canary_slices=1)
+    assert trial.outcome == "crash" and trial.detector == "checksum", trial
+    assert trial.recovered and trial.exact, trial
+    assert trial.rung in (RUNG_EQ1, RUNG_OPT_IV), trial
+    assert trial.replayed == 0, trial
+    assert trial.bytes_moved == 0, trial
+    # ...and the ladder never even attempted a snapshot rung: the repair
+    # is pure scalar arithmetic over the induction registry
+    assert trial.latency_steps == 0, trial
+
+
+def test_triage_tolerates_certified_flip(campaign):
+    """Rung 0 in the live loop: a mantissa-tail flip in a first-moment
+    EMA certifies below-epsilon — triage tolerates it (no repair, zero
+    bytes, zero replay) and the loop runs on without the canary
+    re-firing.  The trajectory is NOT bit-exact (the flip stays), which
+    is the point: tolerated, not repaired."""
+    plan = InjectionPlan("m/groups/0/0/ffn/up/w", 1000, 1, 3, "opt")
+    trial = campaign.run_trial(random.Random(0), plan=plan, canary_slices=1,
+                               triage=True)
+    assert trial.outcome == "crash" and trial.detector == "checksum", trial
+    assert trial.recovered, trial
+    assert trial.rung == RUNG_TRIAGE, trial
+    assert trial.replayed == 0, trial
+    assert trial.bytes_moved == 0, trial
+    assert trial.latency_steps == 0, trial
+
+
+def test_triage_escalates_to_exact_repair(campaign):
+    """The same moment leaf, exponent bit 30: the epsilon certificate
+    fails, triage aborts, and the ladder escalates to an EXACT repair —
+    exact-or-abort survives rung 0."""
+    plan = InjectionPlan("m/groups/0/0/ffn/up/w", 1000, 30, 3, "opt")
+    trial = campaign.run_trial(random.Random(0), plan=plan, canary_slices=1,
+                               triage=True)
+    assert trial.outcome == "crash" and trial.detector == "checksum", trial
+    assert trial.recovered and trial.exact, trial
+    assert trial.rung != RUNG_TRIAGE, trial
+
+
+def test_triage_preserves_param_fault_behaviour(campaign):
+    """triage=True must not change how UNCERTIFIABLE faults recover: a
+    param exponent flip still replays bit-exactly, exactly as in the
+    canary regime without triage."""
+    plan = InjectionPlan("groups/0/0/ffn/up/w", 1000, 30, 3, "params")
+    trial = campaign.run_trial(random.Random(0), plan=plan, canary_slices=1,
+                               triage=True)
+    assert trial.outcome == "crash" and trial.recovered and trial.exact, trial
+    assert trial.rung == RUNG_REPLAY, trial

@@ -4,7 +4,7 @@ the system invariants behind induction-variable recovery."""
 import pytest
 
 pytest.importorskip("hypothesis")   # optional dep: skip, don't break collection
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
 from repro.core.induction import IVRegistry, IVSpec, RecoveryAbort
 
@@ -60,6 +60,65 @@ def test_no_consensus_aborts(n):
     values = {"a": n, "b": 2 * n + 7, "c": 3 * n + 11}
     with pytest.raises(RecoveryAbort):
         reg.recover(values)
+
+
+@given(i0=inits, si=steps, k0=inits, sk=steps, n=iters,
+       r=st.integers(min_value=1, max_value=999))
+@settings(max_examples=200, deadline=None)
+def test_eq1_rejects_off_family_partner(i0, si, k0, sk, n, r):
+    """Regression, generalised: a partner value with a non-zero residue
+    mod its step is NOT on its affine family (it is itself corrupted) —
+    Eq. (1) must abort rather than silently floor-divide and manufacture
+    a wrong repair."""
+    resid = r % abs(sk)
+    assume(resid != 0)
+    reg = IVRegistry({"i": (i0, si), "k": (k0, sk)})
+    with pytest.raises(RecoveryAbort):
+        reg.eq1("i", "k", k0 + n * sk + resid)
+
+
+@given(i0=inits, si=steps, k0=inits, sk=steps, n=iters)
+@settings(max_examples=200, deadline=None)
+def test_eq1_agrees_with_diagnose(i0, si, k0, sk, n):
+    """Pairwise Eq. (1) and the majority engine are one theory: with both
+    partners healthy, diagnose's consensus iteration is n with nothing
+    flagged, and eq1 in either direction reproduces the true values."""
+    reg = IVRegistry({"i": (i0, si), "k": (k0, sk)})
+    vals = {"i": i0 + n * si, "k": k0 + n * sk}
+    n_star, bad = reg.diagnose(vals)
+    assert n_star == n and bad == []
+    assert reg.eq1("i", "k", vals["k"]) == vals["i"]
+    assert reg.eq1("k", "i", vals["i"]) == vals["k"]
+
+
+@given(n=iters, m=iters)
+@settings(max_examples=100, deadline=None)
+def test_strict_majority_repairs_minority(n, m):
+    """3-of-5 agreement is a strict majority: the consensus wins and
+    exactly the two outliers are flagged and rewritten."""
+    assume(n != m)
+    reg = IVRegistry({f"v{j}": (j, 1) for j in range(5)})
+    vals = {f"v{j}": j + (n if j < 3 else m) for j in range(5)}
+    n_star, bad = reg.diagnose(vals)
+    assert n_star == n
+    assert bad == ["v3", "v4"]
+    fixed, repaired = reg.recover(vals)
+    assert repaired == ["v3", "v4"]
+    assert all(fixed[f"v{j}"] == j + n for j in range(5))
+
+
+@given(n=iters, m=iters)
+@settings(max_examples=100, deadline=None)
+def test_tie_is_not_a_majority(n, m):
+    """2-vs-2 split: strict majority means a tie aborts — picking either
+    side would be a coin-flip SDC."""
+    assume(n != m)
+    reg = IVRegistry({f"v{j}": (j, 1) for j in range(4)})
+    vals = {f"v{j}": j + (n if j < 2 else m) for j in range(4)}
+    n_star, _ = reg.diagnose(vals)
+    assert n_star is None
+    with pytest.raises(RecoveryAbort):
+        reg.recover(vals)
 
 
 def test_icp_counts():

@@ -12,6 +12,7 @@ import pytest
 from repro.core import (
     ChecksumCanary,
     FaultReport,
+    InjectionPlan,
     MicroCheckpointer,
     ParityStore,
     RecoveryFailed,
@@ -21,7 +22,12 @@ from repro.core import (
     promote,
     sample_plan,
 )
-from repro.core.recovery_table import RUNG_EQ1, RUNG_REPLAY
+from repro.core.recovery_table import (
+    RUNG_EQ1,
+    RUNG_OPT_IV,
+    RUNG_REPLAY,
+    RUNG_TRIAGE,
+)
 
 
 def _runtime(tiny_setup, **kw):
@@ -185,18 +191,169 @@ def test_every_emittable_rung_has_a_registered_handler(tiny_setup):
     in RecoveryRuntime._RUNGS, or recover() would skip it silently (the
     ladder driver ignores unknown rungs)."""
     cfg, state0, step, bfn = tiny_setup
+    reg = promote(cfg, 2)
+    opt_ivs = tuple(sorted(k for k in (set(reg.specs) | set(reg.derived))
+                           if not k.startswith("iv/")))
+    assert opt_ivs, "promote() must export optimizer-owned induction keys"
     emittable = set()
     for replicated in (False, True):
         for parity in (False, True):
             for sharded in (False, True):
-                table = RecoveryTable.build(state0, replicated=replicated,
-                                            parity=parity, sharded=sharded)
-                for entry in table.entries.values():
-                    emittable.update(entry.ladder)
+                for triage in (False, True):
+                    table = RecoveryTable.build(
+                        state0, replicated=replicated, parity=parity,
+                        sharded=sharded, triage=triage, opt_ivs=opt_ivs)
+                    for entry in table.entries.values():
+                        emittable.update(entry.ladder)
     missing = emittable - set(RecoveryRuntime._RUNGS)
     assert not missing, f"rungs with no registered handler: {missing}"
     # ...and no handler is dead weight: the flag space above reaches all
+    # (triage and opt_iv included — a handler the table can never emit
+    # would be untestable dead code)
     assert emittable == set(RecoveryRuntime._RUNGS)
+
+
+def test_eq1_residue_abort_regression():
+    """data_offset advances by the global batch (a non-unit step): a
+    partner value off that lattice is itself corrupted, and Eq.(1) must
+    refuse it instead of floor-dividing into a silently wrong repair."""
+    from repro.core.induction import IVRegistry, RecoveryAbort
+
+    reg = IVRegistry({"iv/step": (0, 1), "iv/data_offset": (0, 512)})
+    assert reg.eq1("iv/step", "iv/data_offset", 512 * 7) == 7
+    with pytest.raises(RecoveryAbort):
+        reg.eq1("iv/step", "iv/data_offset", 512 * 7 + 3)
+
+
+def test_opt_counter_flip_recovers_via_opt_iv(tiny_setup):
+    """A bit flip in the optimizer's own step counter repairs through the
+    opt_iv branch of the Eq.(1) consensus engine: zero snapshot bytes,
+    zero replayed steps."""
+    cfg, state0, step, bfn = tiny_setup
+    rt, micro = _runtime(tiny_setup)
+    state = _advance(step, bfn, state0, 0, 6, micro)
+
+    bad = inject(state, InjectionPlan("t", 0, 3, 6, "opt"))
+    assert int(bad["opt"]["t"]) != int(state["opt"]["t"])
+    fixed, ev = rt.recover(bad, FaultReport(6, "checksum",
+                                            leaves=["opt/t"]), 6)
+    assert ev.rung == RUNG_OPT_IV
+    assert ev.steps_replayed == 0
+    assert ev.bytes_moved == 0
+    assert int(fixed["opt"]["t"]) == int(state["opt"]["t"])
+
+
+def test_derived_correction_flip_recomputed_bitwise(tiny_setup):
+    """Bias-correction scalars are DERIVED induction entries: a flip in
+    one is repaired by recomputing it from the consensus iteration, and
+    the recomputation must be bit-identical to the never-faulted value."""
+    cfg, state0, step, bfn = tiny_setup
+    rt, micro = _runtime(tiny_setup)
+    state = _advance(step, bfn, state0, 0, 6, micro)
+
+    bad = inject(state, InjectionPlan("bc1", 0, 20, 6, "opt"))
+    fixed, ev = rt.recover(bad, FaultReport(6, "checksum",
+                                            leaves=["opt/bc1"]), 6)
+    assert ev.rung == RUNG_OPT_IV
+    assert ev.steps_replayed == 0
+    assert (np.asarray(fixed["opt"]["bc1"]).tobytes()
+            == np.asarray(state["opt"]["bc1"]).tobytes())   # BIT exact
+    # the healthy twin was untouched by the repair
+    assert (np.asarray(fixed["opt"]["bc2"]).tobytes()
+            == np.asarray(state["opt"]["bc2"]).tobytes())
+
+
+def test_triage_tolerates_sub_epsilon_moment_flip(tiny_setup):
+    """Rung 0: a mantissa-tail flip in an EMA moment carries a certified
+    below-epsilon perturbation — triage tolerates it in place (state
+    untouched) and re-arms the digest row so the canary stays quiet."""
+    cfg, state0, step, bfn = tiny_setup
+    state = _advance(step, bfn, state0, 0, 6)
+    canary = ChecksumCanary(state, n_slices=1)
+    rt, micro = _runtime(tiny_setup, canary=canary, triage=True)
+
+    plan = InjectionPlan("m/groups/0/0/ffn/up/w", 1000, 1, 6, "opt")
+    bad = inject(state, plan)
+    report = canary.check(6, bad)
+    assert report is not None and report.detector == "checksum"
+    assert report.leaves == ["opt/" + plan.leaf]
+
+    fixed, ev = rt.recover(bad, report, 6)
+    assert ev.rung == RUNG_TRIAGE
+    assert ev.steps_replayed == 0
+    assert ev.bytes_moved == 0
+    # tolerate never alters state — the flipped bit is still there
+    for a, b in zip(jax.tree_util.tree_leaves(fixed),
+                    jax.tree_util.tree_leaves(bad)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # ...and the digest table was re-armed to the tolerated bits, so the
+    # very next check does NOT re-fire on the value we chose to live with
+    assert canary.check(7, fixed) is None
+
+
+def test_triage_escalates_uncertifiable_flip(tiny_setup):
+    """An exponent-scale flip in the same moment leaf fails the epsilon
+    certificate: triage must abort into the rest of the ladder (replay
+    here), preserving exact-or-abort."""
+    cfg, state0, step, bfn = tiny_setup
+    rt, micro = _runtime(tiny_setup, triage=True)
+    state = _advance(step, bfn, state0, 0, 6, micro)
+    canary = ChecksumCanary(state, n_slices=1)
+    rt.canary = canary
+
+    plan = InjectionPlan("m/groups/0/0/ffn/up/w", 1000, 30, 6, "opt")
+    bad = inject(state, plan)
+    report = canary.check(6, bad)
+    assert report is not None
+
+    fixed, ev = rt.recover(bad, report, 6)
+    assert ev.rung == RUNG_REPLAY            # escalated past rung 0
+    assert "escalate" in ev.report.detail
+    for a, b in zip(jax.tree_util.tree_leaves(fixed),
+                    jax.tree_util.tree_leaves(state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))  # BIT exact
+
+
+def test_triage_tolerates_int8_pad_tail_flip(tiny_setup):
+    """Dead-region certificate: a flip in the int8-quantised moment pad
+    tail (bytes _dq8 never reads, rewritten wholesale each update) is
+    tolerated bitwise — no epsilon needed."""
+    from repro.optim.optimizers import _q8
+
+    p = jnp.arange(300, dtype=jnp.float32) / 7.0    # pads to 2x256 blocks
+    state = {"params": {"w": p}, "opt": {"m": {"w": _q8(p)}},
+             "iv": {"step": jnp.int32(4)}}
+    canary = ChecksumCanary(state, n_slices=1)
+    rt, micro = _runtime(tiny_setup, canary=canary, triage=True)
+
+    bad = inject(state, InjectionPlan("m/w/q", 310, 6, 4, "opt"))
+    report = canary.check(4, bad)
+    assert report is not None and report.leaves == ["opt/m/w/q"]
+
+    fixed, ev = rt.recover(bad, report, 4)
+    assert ev.rung == RUNG_TRIAGE
+    assert "dead-region" in ev.report.detail
+    assert canary.check(5, fixed) is None    # re-armed
+
+
+def test_triage_dead_element_boundary(tiny_setup):
+    """The dead-element predicate draws the line exactly at the logical
+    param size: pad-tail elements certify, live elements never do."""
+    from repro.optim.optimizers import QBLOCK, _q8
+
+    rt, micro = _runtime(tiny_setup)
+    p = jnp.arange(300, dtype=jnp.float32)
+    state = {"params": {"w": p}, "opt": {"m": {"w": _q8(p)}},
+             "iv": {"step": jnp.int32(0)}}
+    assert rt._dead_element(state, "opt/m/w/q", 300)       # first pad elt
+    assert rt._dead_element(state, "opt/m/w/q", 511)       # last pad elt
+    assert not rt._dead_element(state, "opt/m/w/q", 299)   # last live elt
+    # both scale rows cover live elements (block 1 holds 256..299)
+    assert not rt._dead_element(state, "opt/m/w/scale", 0)
+    assert not rt._dead_element(state, "opt/m/w/scale", 1)
+    assert rt._dead_element(state, "opt/m/w/scale", 2)     # all-pad block
+    # never certifies outside the quantised-moment subtree
+    assert not rt._dead_element(state, "params/w", 500)
 
 
 def test_replica_vote_routes_through_vote_kernel():
