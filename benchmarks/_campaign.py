@@ -110,23 +110,18 @@ class Campaign:
 
         state = make_train_state(self.cfg, jax.random.PRNGKey(seed),
                                  global_batch=B)
-        if self.ctx is not None:
-            # mesh regime: shard the state, pin its layout through the
-            # step, shard batches — the ground truth below then IS the
-            # mesh trajectory (GSPMD reduction order is not bit-identical
-            # to single-device, so truth must be computed where trials run)
-            from repro.launch.specs import batch_shardings, state_shardings
-            from repro.train.loop import pin_state_shardings
-            self.shardings, _ = state_shardings(self.ctx, self.cfg, state)
-            state = jax.device_put(state, self.shardings)
-            self._pin = lambda fn: pin_state_shardings(fn, self.shardings)
-            bsh, _ = batch_shardings(self.ctx, self.pipe.batch_at(0))
-            self.bfn = lambda s: jax.device_put(self.pipe.batch_at(s), bsh)
-        else:
-            self._pin = lambda fn: fn
-            self.bfn = lambda s: self.pipe.batch_at(s)
-        self.step = jax.jit(self._pin(
-            make_train_step(self.cfg, global_batch=B)))
+        # mesh regime: the bind recipe (shard the state, pin its layout
+        # through the step, shard batches) — the ground truth below then
+        # IS the mesh trajectory (GSPMD reduction order is not
+        # bit-identical to single-device, so truth must be computed where
+        # trials run); off-mesh everything passes through untouched
+        from repro.launch.specs import bind_state
+        bound = bind_state(self.ctx, self.cfg, state,
+                           make_train_step(self.cfg, global_batch=B),
+                           lambda s: self.pipe.batch_at(s))
+        state, pinned, self.bfn, self.shardings = bound
+        self._pin = bound.pin
+        self.step = jax.jit(pinned)
 
         # fault-free reference trajectory (ground truth for benign/SDC/exact)
         self.states = [state]

@@ -355,8 +355,6 @@ def sharded_steady_state(campaign: Campaign, steps: int = 10,
     if n_dev < 2:
         return None
     from repro.distributed.context import DistContext
-    from repro.launch.specs import batch_shardings, state_shardings
-    from repro.train.loop import pin_state_shardings
 
     if campaign.ctx is not None:
         # mesh-regime campaign: its step is already pinned to its own
@@ -374,11 +372,10 @@ def sharded_steady_state(campaign: Campaign, steps: int = 10,
         else:
             mesh = jax.make_mesh((n_dev,), ("data",))
         ctx = DistContext.for_mesh(mesh)
-        sh, _ = state_shardings(ctx, campaign.cfg, campaign.states[0])
-        state = jax.device_put(campaign.clone(campaign.states[0]), sh)
-        bsh, _ = batch_shardings(ctx, campaign.bfn(0))
-        bfn = lambda s: jax.device_put(campaign.bfn(s), bsh)
-        raw = pin_state_shardings(campaign.raw_step(), sh)
+        from repro.launch.specs import bind_state
+        state, raw, bfn, _ = bind_state(
+            ctx, campaign.cfg, campaign.clone(campaign.states[0]),
+            campaign.raw_step(), campaign.bfn)
     step_fn = jax.jit(raw)
 
     canary = ChecksumCanary(state, n_slices=n_slices, ctx=ctx)

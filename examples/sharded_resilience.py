@@ -31,11 +31,10 @@ from repro.core.recover import RecoveryRuntime
 from repro.data.pipeline import TokenPipeline
 from repro.distributed.context import DistContext
 from repro.kernels import digest as kdigest
-from repro.launch.specs import batch_shardings, state_shardings
+from repro.launch.specs import bind_state
 from repro.train.loop import (
     make_train_state,
     make_train_step,
-    pin_state_shardings,
 )
 
 
@@ -50,12 +49,10 @@ def main():
 
     pipe = TokenPipeline(cfg.model.vocab_size, S, B, seed=0)
     state = make_train_state(cfg, jax.random.PRNGKey(0), global_batch=B)
-    shardings, _ = state_shardings(ctx, cfg, state)
-    state = jax.device_put(state, shardings)
-    bsh, _ = batch_shardings(ctx, pipe.batch_at(0))
-    bfn = lambda s: jax.device_put(pipe.batch_at(s), bsh)
-    step = jax.jit(pin_state_shardings(make_train_step(cfg, global_batch=B),
-                                       shardings))
+    state, pinned, bfn, shardings = bind_state(
+        ctx, cfg, state, make_train_step(cfg, global_batch=B),
+        lambda s: pipe.batch_at(s))
+    step = jax.jit(pinned)
 
     micro = MicroCheckpointer(interval=2, ctx=ctx)
     canary = ChecksumCanary(state, n_slices=1, ctx=ctx)

@@ -147,6 +147,11 @@ class FaultReport:
     #: so its reports stay ``consumed=False`` and parity can repair live
     #: survivors even under donation.
     consumed: bool = False
+    #: HARD loss (non-transient): data-axis row indices whose devices are
+    #: gone (host/board failure).  A non-empty tuple routes the ladder to
+    #: the ``remesh`` rung — in-place repair is meaningless when the
+    #: hardware itself is dead (launch/elastic.py; DESIGN.md §7).
+    lost_rows: Tuple[int, ...] = ()
 
     def resolve(self) -> List[str]:
         """Materialise ``leaves`` (and ``shards``, on a mesh) from a
@@ -216,6 +221,18 @@ def trap_loss_spike(step: int, metrics: Dict, history: Sequence[float],
 # ChecksumCanary instance over the same structure — e.g. one per campaign
 # trial — reuses the same compiled functions and never retraces.
 _FUSED_CACHE: Dict[Tuple[object, int, str, int], object] = {}
+
+
+def evict_mesh(mesh) -> int:
+    """Drop fused canary executables whose plan (digest or parity) is
+    keyed on ``mesh`` — the elastic remesh path calls this so a dead
+    mesh's executables release their buffers and a later drill in the
+    same process cannot hit a stale-device program."""
+    mk = kdigest._mesh_key(mesh)
+    stale = [k for k in _FUSED_CACHE if kdigest.key_on_mesh(k, mk)]
+    for k in stale:
+        del _FUSED_CACHE[k]
+    return len(stale)
 
 
 class ChecksumCanary:
@@ -646,6 +663,32 @@ class ChecksumCanary:
             table = self.reference
         table = kdigest.fetch(table)
         return {k: table[..., i, :] for i, k in enumerate(self._keys)}
+
+    def surviving_reference_digests(self, dead):
+        """``fault_reference_digests`` under a HARD loss: the reference
+        table is sharded row-per-device, so the dead devices' rows are
+        genuinely gone — reading them in a single-process simulation
+        would be cheating the drill.  Returns ``(digests, have)``:
+        ``digests[k]`` is the (n_shards, 2) rows with dead rows zeroed,
+        ``have[d]`` marks the rows read from surviving devices (the only
+        rows a survivor shard may be certified against)."""
+        if self.ctx is None:
+            raise ValueError("surviving_reference_digests needs a "
+                             "sharded canary")
+        table = self._fault_reference
+        if table is None:
+            table = self.reference
+        dead = set(dead)
+        out = np.zeros(table.shape, np.int32)
+        got = np.zeros(table.shape, bool)
+        for sh in table.addressable_shards:
+            if sh.device in dead:
+                continue
+            out[sh.index] = np.asarray(sh.data)
+            got[sh.index] = True
+        have = got.reshape(table.shape[0], -1).all(axis=1)
+        dig = {k: out[..., i, :] for i, k in enumerate(self._keys)}
+        return dig, have
 
     def fault_reference_digest(self, key: str) -> np.ndarray:
         """Single-leaf row of ``fault_reference_digests`` — the reference

@@ -75,6 +75,22 @@ def clear_executable_cache() -> None:
     _EXEC_CACHE.clear()
 
 
+def evict_mesh(mesh) -> int:
+    """Drop cached fused-step executables keyed on ``mesh`` (via their
+    digest/parity plans) across ALL live step functions — the elastic
+    remesh path: a dead mesh's executables must release their buffers,
+    and a second drill in-process must never hit one."""
+    from repro.kernels import digest as kdigest
+    mk = kdigest._mesh_key(mesh)
+    n = 0
+    for by_key in _EXEC_CACHE.values():
+        stale = [k for k in by_key if kdigest.key_on_mesh(k, mk)]
+        for k in stale:
+            del by_key[k]
+        n += len(stale)
+    return n
+
+
 def _sds(tree):
     """ShapeDtypeStructs of a pytree — compile without executing.
 

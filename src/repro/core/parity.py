@@ -39,6 +39,31 @@ Layout: the per-leaf parity blocks are concatenated into ONE int32 buffer —
     packing buffers — each device holds 1/D of the parity (total memory
     overhead = state_bytes/D).
 
+Hard loss (``row_safe=True``; DESIGN.md §7): the default placement puts
+parity row ``d`` on device ``d`` — a whole lost DATA ROW therefore takes
+its parity down with its data, and a leaf sharded over both the data and
+the model axis loses SEVERAL unique blocks at once (one per model
+column), which a single flat XOR fold cannot reconstruct.  ``row_safe``
+mode fixes both for the elastic remesh path:
+
+  * **placement** — the buffer is sharded over the NON-batch axes only
+    (``P(("model",), None)``; fully replicated on a pure-DP mesh), so
+    every surviving data row holds a complete copy of the parity.  The
+    per-device memory cost rises from stream/D to stream/tp.
+  * **fold groups** — unique blocks are grouped by their slice projection
+    onto the dims NOT sharded over batch axes; the XOR fold runs PER
+    GROUP (the stream carries ``n_groups × block_len`` columns per leaf),
+    so a lost data row erases at most ONE member of each group — exactly
+    the single erasure XOR inverts.  Only data-sharded leaves are covered
+    in this mode: replicated / model-only leaves keep a surviving replica
+    on the remaining rows and are re-gathered instead (launch/elastic.py).
+
+Host-side reconstruction (``host_parity_flat`` / ``host_surviving_blocks``
+/ ``host_reconstruct_block`` / ``host_assemble_leaf``) reads ONLY shards
+on surviving devices — the honesty contract of the simulated-loss drill:
+dead devices still answer in a single-process simulation, so every read
+on the remesh path filters ``addressable_shards`` explicitly.
+
 The hot-path entry points (``update_leaves`` / ``rebuild_leaves``) are pure
 and traceable: the canary embeds them INSIDE its fused check/arm programs
 (core/detect.py) and the fused step factory inside the donated step itself
@@ -106,7 +131,11 @@ class ParityPlan:
                  shapes: Dict[str, Tuple[int, ...]],
                  dtypes: Dict[str, str],
                  slices: Optional[Dict[str, Tuple]],
-                 n_shards: int, mesh=None):
+                 n_shards: int, mesh=None,
+                 groups: Optional[Dict[str, Tuple[Tuple[int, ...], ...]]]
+                 = None,
+                 row_safe: bool = False,
+                 parity_axes: Tuple[str, ...] = ()):
         self.keys = keys
         self.key_set = frozenset(keys)
         self.shapes = shapes
@@ -117,6 +146,10 @@ class ParityPlan:
         self.n_shards = n_shards
         self.mesh = mesh
         self.axis_names = tuple(mesh.axis_names) if mesh is not None else ()
+        #: row-loss-survivable mode: fold per group, shard the buffer over
+        #: the non-batch axes only (``parity_axes``; () -> replicated)
+        self.row_safe = row_safe
+        self.parity_axes = tuple(parity_axes)
 
         #: per-key common block length (int32 elements; blocks are padded
         #: to it so every leaf contributes equal columns to the stream)
@@ -130,6 +163,13 @@ class ParityPlan:
         #: the sharded canary attributes faults per DEVICE; off-mesh the
         #: two coordinate systems coincide)
         self.device_block: Dict[str, Tuple[int, ...]] = {}
+        #: per-key fold groups: tuple of member-block-id tuples.  Default
+        #: (non-row_safe) is ONE group holding every block — the original
+        #: flat fold, same stream layout, bit for bit.
+        self.groups: Dict[str, Tuple[Tuple[int, ...], ...]] = {}
+        #: per-key block id -> (group, member index within the group)
+        self.block_group: Dict[str, Tuple[Tuple[int, int], ...]] = {}
+        self.n_groups: Dict[str, int] = {}
         off = 0
         self.offsets: Dict[str, int] = {}
         for k in keys:
@@ -157,17 +197,44 @@ class ParityPlan:
                 self.block_len[k] = max(bsizes)
                 self.n_blocks[k] = len(uniq)
                 self.device_block[k] = dev_to_blk
+            gk = (groups or {}).get(k)
+            if gk is None:
+                gk = (tuple(range(self.n_blocks[k])),)
+            self.groups[k] = gk
+            bg = [(0, 0)] * self.n_blocks[k]
+            for g, members in enumerate(gk):
+                for m, blk in enumerate(members):
+                    bg[blk] = (g, m)
+            self.block_group[k] = tuple(bg)
+            self.n_groups[k] = len(gk)
             self.offsets[k] = off
-            off += self.block_len[k]
+            off += self.n_groups[k] * self.block_len[k]
         #: total parity stream length (int32 elements)
         self.stream_len = off
+        if row_safe:
+            self.fold_width = max(
+                [1] + [max((len(g) for g in self.groups[k]), default=1)
+                       for k in keys])
+        else:
+            self.fold_width = n_shards
         if mesh is None:
             self.n_tiles = max(1, -(-self.stream_len // TILE))
             self.buffer_shape = (self.n_tiles, TILE_ROWS, LANES)
+            self.buffer_spec = None
+        elif row_safe:
+            rows = 1
+            for a in self.parity_axes:
+                rows *= mesh.shape[a]
+            crow = max(LANES, -(-self.stream_len // rows))
+            crow = -(-crow // LANES) * LANES
+            self.buffer_shape = (rows, crow)
+            self.buffer_spec = P(self.parity_axes if self.parity_axes
+                                 else None, None)
         else:
             crow = max(LANES, -(-self.stream_len // n_shards))
             crow = -(-crow // LANES) * LANES
             self.buffer_shape = (n_shards, crow)
+            self.buffer_spec = P(self.axis_names, None)
         self._recon_cache: Dict[Tuple[str, int], object] = {}
 
     # -- layout helpers ----------------------------------------------------
@@ -193,41 +260,71 @@ class ParityPlan:
         z = jnp.zeros(self.buffer_shape, jnp.int32)
         if self.mesh is not None:
             z = jax.device_put(
-                z, NamedSharding(self.mesh, P(self.axis_names, None)))
+                z, NamedSharding(self.mesh, self.buffer_spec))
         return z
 
     # -- traceable stream construction ------------------------------------
 
+    def _block_rows(self, key: str, leaf) -> List[jnp.ndarray]:
+        """Per-unique-block padded int32 rows (mesh mode)."""
+        c = self.block_len[key]
+        uniq, _ = self.slices[key]
+        rep = NamedSharding(self.mesh, P(None)) \
+            if self.row_safe and self.mesh is not None else None
+        rows = []
+        for idx in uniq:
+            blk = leaf[tuple(slice(a, b) for a, b in idx)]
+            row = kref.to_i32(blk)
+            if rep is not None:
+                # jax 0.4.x XLA:CPU SPMD miscompiles concatenate over
+                # flattened slices of a middle-dim-sharded operand (wrong
+                # VALUES, not layout); pinning each row replicated before
+                # any stack/concat keeps the downstream fold local.  The
+                # gather is semantically free: the group fold XORs blocks
+                # living on different data rows, so cross-row movement of
+                # the stream is inherent to parity maintenance.
+                row = jax.lax.with_sharding_constraint(row, rep)
+            if row.shape[0] < c:
+                row = jnp.pad(row, (0, c - row.shape[0]))
+            rows.append(row)
+        return rows
+
     def _leaf_blocks(self, key: str, leaf) -> jnp.ndarray:
-        """(D, block_len[key]) int32 — the leaf's unique logical blocks,
-        derived from the SAME slice map the canary's shard digests use,
-        zero rows padding the shard axis (a replicated slice contributes
-        ONCE; duplicate copies would self-cancel under XOR)."""
+        """(fold_width, n_groups*block_len) int32 — the leaf's unique
+        logical blocks laid out for the fold, derived from the SAME slice
+        map the canary's shard digests use (a replicated slice contributes
+        ONCE; duplicate copies would self-cancel under XOR).  Row m holds
+        each group's m-th member side by side; rows past a group's size
+        are zero padding, so folding the row axis XORs exactly the members
+        of each group into that group's parity segment."""
         c = self.block_len[key]
         if self.slices is None:
             flat = kref.to_i32(leaf)
             flat = jnp.pad(flat, (0, self.n_shards * c - flat.shape[0]))
             return flat.reshape(self.n_shards, c)
-        uniq, _ = self.slices[key]
-        rows = []
-        for idx in uniq:
-            blk = leaf[tuple(slice(a, b) for a, b in idx)]
-            row = kref.to_i32(blk)
-            if row.shape[0] < c:
-                row = jnp.pad(row, (0, c - row.shape[0]))
-            rows.append(row)
-        if len(rows) < self.n_shards:
-            rows.append(jnp.zeros((self.n_shards - len(rows), c), jnp.int32))
-            return jnp.concatenate(
-                [jnp.stack(rows[:-1]), rows[-1]], axis=0)
-        return jnp.stack(rows)
+        rows = self._block_rows(key, leaf)
+        if not self.row_safe:
+            if len(rows) < self.fold_width:
+                rows.append(jnp.zeros(
+                    (self.fold_width - len(rows), c), jnp.int32))
+                return jnp.concatenate(
+                    [jnp.stack(rows[:-1]), rows[-1]], axis=0)
+            return jnp.stack(rows)
+        zero = jnp.zeros((c,), jnp.int32)
+        out = []
+        for m in range(self.fold_width):
+            segs = [rows[members[m]] if m < len(members) else zero
+                    for members in self.groups[key]]
+            out.append(segs[0] if len(segs) == 1
+                       else jnp.concatenate(segs))
+        return jnp.stack(out)
 
     def stream_mat(self, leaves: Sequence) -> jnp.ndarray:
-        """(D, stream_len) int32: row d = shard-d's concatenated blocks."""
+        """(fold_width, stream_len) int32: the fold input columns."""
         mat = jnp.concatenate(
             [self._leaf_blocks(k, leaf)
              for k, leaf in zip(self.keys, leaves)], axis=1)
-        if self.mesh is not None:
+        if self.mesh is not None and not self.row_safe:
             mat = jax.lax.with_sharding_constraint(
                 mat, NamedSharding(self.mesh, P(self.axis_names, None)))
         return mat
@@ -246,11 +343,19 @@ class ParityPlan:
         fold = mat[0]
         for d in range(1, mat.shape[0]):
             fold = fold ^ mat[d]
+        if self.row_safe:
+            # pin the fold replicated BEFORE the buffer placement: the
+            # partitioner otherwise propagates the buffer sharding back
+            # through the fold and re-enters the miscompiled slice+concat
+            # partitioning (see _block_rows) — the final constraint then
+            # becomes a local slice-out of the replicated fold.
+            fold = jax.lax.with_sharding_constraint(
+                fold, NamedSharding(self.mesh, P(None)))
         pad = int(np.prod(self.buffer_shape, dtype=np.int64)) \
             - self.stream_len
         rows = jnp.pad(fold, (0, pad)).reshape(self.buffer_shape)
         return jax.lax.with_sharding_constraint(
-            rows, NamedSharding(self.mesh, P(self.axis_names, None)))
+            rows, NamedSharding(self.mesh, self.buffer_spec))
 
     # -- traceable hot-path entry points -----------------------------------
 
@@ -258,6 +363,14 @@ class ParityPlan:
         """Parity from scratch — the donated-pair ``arm_current`` form
         (only one state version is ever visible under donation, so the
         per-step maintenance is a rebuild of the armed version)."""
+        if not self.keys:
+            # empty coverage (e.g. row_safe over a pure-DP state: every
+            # leaf re-gathers from replicas instead) — keep a zero buffer
+            z = jnp.zeros(self.buffer_shape, jnp.int32)
+            if self.mesh is not None:
+                z = jax.lax.with_sharding_constraint(
+                    z, NamedSharding(self.mesh, self.buffer_spec))
+            return z
         mat = self.stream_mat(leaves)
         if self.mesh is not None:
             return self._fold_rows(mat)
@@ -271,6 +384,8 @@ class ParityPlan:
         zeroed, so the committed parity keeps describing the last healthy
         version — the gate is applied to the DELTA, not the result, so the
         donated parity buffer is consumed exactly once (alias-safe)."""
+        if not self.keys:
+            return parity
         delta = self.stream_mat(old_leaves) ^ self.stream_mat(new_leaves)
         delta = jnp.where(fault, jnp.int32(0), delta)
         if self.mesh is not None:
@@ -280,20 +395,30 @@ class ParityPlan:
 
     # -- fault path: reconstruction ---------------------------------------
 
-    def _parity_segment(self, parity, key: str) -> jnp.ndarray:
-        off = self.offsets[key]
+    def _parity_segment(self, parity, key: str,
+                        group: int = 0) -> jnp.ndarray:
+        off = self.offsets[key] + group * self.block_len[key]
         flat = parity.reshape(-1)
         return jax.lax.dynamic_slice(flat, (off,), (self.block_len[key],))
 
     def _survivor_fold(self, parity, leaf, key: str, shard: int):
-        """parity_segment ^ XOR over the surviving blocks — the injured
-        block's exact bits (padded to block_len).  ``shard`` is a
-        unique-block id; rows past ``n_blocks[key]`` are zero padding."""
-        acc = self._parity_segment(parity, key)
-        blocks = self._leaf_blocks(key, leaf)
-        for d in range(self.n_blocks[key]):
-            if d != shard:
-                acc = acc ^ blocks[d]
+        """group_parity_segment ^ XOR over the group's surviving members —
+        the injured block's exact bits (padded to block_len).  ``shard``
+        is a unique-block id; only its fold group participates (in the
+        default single-group layout that is every block, the original
+        flat fold)."""
+        g, _ = self.block_group[key][shard]
+        acc = self._parity_segment(parity, key, g)
+        if self.slices is None:
+            blocks = self._leaf_blocks(key, leaf)
+            for d in range(self.n_blocks[key]):
+                if d != shard:
+                    acc = acc ^ blocks[d]
+            return acc
+        rows = self._block_rows(key, leaf)
+        for blk in self.groups[key][g]:
+            if blk != shard:
+                acc = acc ^ rows[blk]
         return acc
 
     def reconstruct_shard(self, key: str, shard: int):
@@ -333,27 +458,175 @@ class ParityPlan:
             self._recon_cache[(key, shard)] = ent
         return ent
 
+    # -- hard-loss path: host-side, survivor-only reads --------------------
+    #
+    # The elastic remesh path (launch/elastic.py) runs on the HOST against
+    # a mesh whose devices are partly "dead".  In the single-process
+    # simulation dead devices still answer, so these helpers take the dead
+    # device set explicitly and filter every ``addressable_shards`` read —
+    # reading a dead shard would be cheating the drill.
+
+    def _flat_device_index(self) -> Dict:
+        devs = kdigest.mesh_device_order(self.mesh)
+        return {dev: i for i, dev in enumerate(devs)}
+
+    def host_parity_flat(self, parity, dead=frozenset()) -> np.ndarray:
+        """The full flat parity stream assembled from SURVIVING devices
+        only.  Raises if any parity region went down with the dead set —
+        the row_safe placement exists precisely so it never does for a
+        data-row loss."""
+        if self.mesh is None:
+            return np.asarray(parity).reshape(-1)[:self.stream_len]
+        dead = set(dead)
+        out = np.zeros(self.buffer_shape, np.int32)
+        have = np.zeros(self.buffer_shape, bool)
+        for sh in parity.addressable_shards:
+            if sh.device in dead:
+                continue
+            out[sh.index] = np.asarray(sh.data)
+            have[sh.index] = True
+        if not bool(have.all()):
+            raise RuntimeError(
+                "parity rows lost along with the dead devices — a hard "
+                "row loss needs the row_safe placement (ParityStore("
+                "row_safe=True))")
+        return out.reshape(-1)[:self.stream_len]
+
+    def host_surviving_blocks(self, key: str, leaf,
+                              dead=frozenset()) -> Dict[int, np.ndarray]:
+        """block id -> padded int32 row, read only from surviving
+        replicas (first surviving holder per unique block wins)."""
+        c = self.block_len[key]
+        fidx = self._flat_device_index()
+        dmap = self.device_block[key]
+        dead = set(dead)
+        out: Dict[int, np.ndarray] = {}
+        for sh in leaf.addressable_shards:
+            if sh.device in dead:
+                continue
+            b = dmap[fidx[sh.device]]
+            if b in out:
+                continue
+            row = np.asarray(kref.to_i32(sh.data))
+            if row.shape[0] < c:
+                row = np.pad(row, (0, c - row.shape[0]))
+            out[b] = row
+        return out
+
+    def host_reconstruct_block(self, key: str, blk: int,
+                               parity_flat: np.ndarray,
+                               blocks: Dict[int, np.ndarray]) -> np.ndarray:
+        """Lost block ``blk`` from its group's parity segment + surviving
+        members — exact by XOR algebra.  Raises on a double erasure
+        within the fold group (two dead members: not invertible)."""
+        g, _ = self.block_group[key][blk]
+        c = self.block_len[key]
+        off = self.offsets[key] + g * c
+        acc = parity_flat[off:off + c].astype(np.int32).copy()
+        for other in self.groups[key][g]:
+            if other == blk:
+                continue
+            row = blocks.get(other)
+            if row is None:
+                raise RuntimeError(
+                    f"double erasure in the fold group of {key}: blocks "
+                    f"{blk} and {other} are both lost — XOR parity "
+                    f"inverts a single erasure per group")
+            acc ^= row
+        bsize = self.block_sizes[key][blk]
+        bshape = self.block_shapes[key][blk]
+        return np.asarray(kref.from_i32(
+            jnp.asarray(acc[:bsize]),
+            jnp.zeros(bshape, self.dtypes[key])))
+
+    def host_assemble_leaf(self, key: str, leaf, dead=frozenset()):
+        """(full host array, missing unique-block ids): surviving shards
+        placed at their slice-map positions, blocks with no surviving
+        replica listed for parity reconstruction."""
+        fidx = self._flat_device_index()
+        dmap = self.device_block[key]
+        uniq, _ = self.slices[key]
+        dead = set(dead)
+        out = np.zeros(self.shapes[key], jnp.dtype(self.dtypes[key]))
+        have = set()
+        for sh in leaf.addressable_shards:
+            if sh.device in dead:
+                continue
+            b = dmap[fidx[sh.device]]
+            if b in have:
+                continue
+            out[tuple(slice(a, bnd) for a, bnd in uniq[b])] = \
+                np.asarray(sh.data)
+            have.add(b)
+        missing = [b for b in range(self.n_blocks[key]) if b not in have]
+        return out, missing
+
 
 _PARITY_PLAN_CACHE: Dict[Tuple, ParityPlan] = {}
 
 
-def parity_plan_for(tree, *, mesh=None, n_shards: int = 4) -> ParityPlan:
+def evict_mesh_plans(mesh) -> int:
+    """Drop cached ParityPlans keyed on ``mesh`` (elastic remesh: plans
+    for the lost mesh must not pin dead-device layouts in memory)."""
+    mk = kdigest._mesh_key(mesh)
+    stale = [k for k in _PARITY_PLAN_CACHE if k[0] == mk]
+    for k in stale:
+        del _PARITY_PLAN_CACHE[k]
+    return len(stale)
+
+
+def _dim_axes(entry) -> Tuple[str, ...]:
+    """PartitionSpec dim entry -> tuple of mesh axis names."""
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def parity_plan_for(tree, *, mesh=None, n_shards: int = 4,
+                    row_safe: bool = False,
+                    batch_axes: Tuple[str, ...] = ()) -> ParityPlan:
     """The cached ParityPlan for ``tree``'s structure (and, on a mesh, its
-    actual NamedSharding layout — the slice map IS the plan)."""
+    actual NamedSharding layout — the slice map IS the plan).
+
+    ``row_safe`` (requires ``mesh`` + ``batch_axes``): row-loss-survivable
+    coverage — only DATA-sharded leaves are covered (replicated /
+    model-only leaves keep surviving replicas and are re-gathered on the
+    elastic path instead), blocks fold per group (grouped by their slice
+    projection onto the non-data dims, so a lost row erases at most one
+    member per group), and the buffer shards over the non-batch axes
+    only.  Leaves with a dim sharded JOINTLY over batch and non-batch
+    axes are excluded: a row loss would doubly erase inside one group
+    (real model specs from ``spec_for_param`` never joint-shard)."""
+    if row_safe and mesh is None:
+        raise ValueError("row_safe parity requires a mesh")
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    bset = set(batch_axes)
     entries = []
+    groups: Dict[str, Tuple[Tuple[int, ...], ...]] = {}
     for path, x in flat:
         k = leaf_key(path)
         dt = jnp.result_type(x)
         if not _covered(k, dt, jnp.shape(x)):
             continue
         shape = tuple(jnp.shape(x))
+        gk = None
         if mesh is not None:
             sharding = getattr(x, "sharding", None)
             if not isinstance(sharding, NamedSharding):
                 raise ValueError(
                     f"parity on a mesh requires NamedSharding leaves; "
                     f"{k} has {type(sharding).__name__}")
+            if row_safe:
+                spec = tuple(sharding.spec)
+                spec = spec + (None,) * (len(shape) - len(spec))
+                per_dim = [set(_dim_axes(e)) for e in spec]
+                data_dims = tuple(i for i, ax in enumerate(per_dim)
+                                  if ax and ax <= bset)
+                mixed = any(ax & bset and ax - bset for ax in per_dim)
+                if not data_dims or mixed:
+                    continue
             per_dev = tuple(_norm_slices(idx, shape)
                             for idx in kdigest.shard_indices(x))
             # dedupe replicas in mesh-flat device order: XOR over
@@ -370,22 +643,47 @@ def parity_plan_for(tree, *, mesh=None, n_shards: int = 4) -> ParityPlan:
                     uniq.append(idx)
                 dev_to_blk.append(b)
             sl = (tuple(uniq), tuple(dev_to_blk))
+            if row_safe:
+                # fold groups: same non-data projection -> same group
+                # (members differ only in data coordinates, so one lost
+                # row kills at most one member per group)
+                dset = set(data_dims)
+                gmap: Dict[Tuple, int] = {}
+                glist: List[List[int]] = []
+                for b, idx in enumerate(uniq):
+                    p = tuple(s for i, s in enumerate(idx)
+                              if i not in dset)
+                    gi = gmap.get(p)
+                    if gi is None:
+                        gi = gmap[p] = len(glist)
+                        glist.append([])
+                    glist[gi].append(b)
+                gk = tuple(tuple(g) for g in glist)
         else:
             sl = None
-        entries.append((k, shape, dt.name, sl))
+        entries.append((k, shape, dt.name, sl, gk))
+        if gk is not None:
+            groups[k] = gk
     entries.sort(key=lambda e: e[0])
     d = mesh.size if mesh is not None else max(2, n_shards)
     key = (kdigest._mesh_key(mesh) if mesh is not None else ("host", d),
-           treedef, tuple(entries))
+           treedef, tuple(entries), row_safe, tuple(batch_axes))
     plan = _PARITY_PLAN_CACHE.get(key)
     if plan is None:
+        if row_safe:
+            parity_axes = tuple(a for a in mesh.axis_names
+                                if a not in bset)
+        else:
+            parity_axes = ()
         plan = ParityPlan(
-            keys=tuple(k for k, _, _, _ in entries),
-            shapes={k: s for k, s, _, _ in entries},
-            dtypes={k: dt for k, _, dt, _ in entries},
-            slices={k: sl for k, _, _, sl in entries}
+            keys=tuple(e[0] for e in entries),
+            shapes={e[0]: e[1] for e in entries},
+            dtypes={e[0]: e[2] for e in entries},
+            slices={e[0]: e[3] for e in entries}
             if mesh is not None else None,
-            n_shards=d, mesh=mesh)
+            n_shards=d, mesh=mesh,
+            groups=groups if row_safe else None,
+            row_safe=row_safe, parity_axes=parity_axes)
         _PARITY_PLAN_CACHE[key] = plan
     return plan
 
@@ -401,10 +699,15 @@ class ParityStore:
     fault path.
     """
 
-    def __init__(self, tree, *, ctx=None, n_shards: int = 4):
+    def __init__(self, tree, *, ctx=None, n_shards: int = 4,
+                 row_safe: bool = False):
         mesh = ctx.mesh if (ctx is not None
                             and getattr(ctx, "enabled", False)) else None
-        self.plan = parity_plan_for(tree, mesh=mesh, n_shards=n_shards)
+        if row_safe and mesh is None:
+            row_safe = False  # off-mesh: no rows to lose
+        self.plan = parity_plan_for(
+            tree, mesh=mesh, n_shards=n_shards, row_safe=row_safe,
+            batch_axes=tuple(ctx.batch_axes) if row_safe else ())
         self.parity = self.plan.make_buffer()
         self.version = -1
 

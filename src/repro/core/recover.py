@@ -53,6 +53,7 @@ from repro.core.recovery_table import (
     RUNG_EQ1,
     RUNG_OPT_IV,
     RUNG_PARITY,
+    RUNG_REMESH,
     RUNG_REPLAY,
     RUNG_REPLICA,
     RUNG_SHARD,
@@ -137,7 +138,8 @@ class RecoveryRuntime:
                  donated: bool = False,
                  shardings=None,
                  canary: Optional[ChecksumCanary] = None,
-                 triage: bool = False):
+                 triage: bool = False,
+                 elastic: Optional[Callable] = None):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.ivs = iv_registry
@@ -150,6 +152,14 @@ class RecoveryRuntime:
         self.shardings = shardings
         self.canary = canary
         self.triage = triage
+        #: hard-loss handler ``(state, report, step) -> ElasticResume``
+        #: (``launch/elastic.ElasticManager.hook`` — core/ stays
+        #: layering-clean by taking a callable, not the manager)
+        self.elastic = elastic
+        #: the remesh rung's side channel: the full resume bundle (new
+        #: ctx/step/bfn/canary/parity) for the loop to swap in after
+        #: ``recover`` returns the reconstructed state
+        self.pending_remesh = None
         self.events: List[RecoveryEvent] = []
 
     # ------------------------------------------------------------------
@@ -697,6 +707,38 @@ class RecoveryRuntime:
         self._last_replayed = res.steps_replayed
         return res.state, f"restored step {ck_step} + replayed to {step}"
 
+    def _rung_remesh(self, state, report: FaultReport, step: int):
+        """HARD loss: devices are gone, not corrupt — shrink the mesh and
+        keep training (DESIGN.md §7).  Delegates to the attached elastic
+        handler (survivor-honest gather + certify, parity reconstruction
+        of the dead rows' shards, old-mesh cache eviction, one re-lower
+        on the degraded context) and swaps the runtime's own executables
+        so any later rung/replay this event — and every subsequent one —
+        runs against the new mesh.  The full resume bundle is left on
+        ``pending_remesh`` for the training loop."""
+        if self.elastic is None:
+            raise RecoveryAbort("no elastic handler attached")
+        rows = tuple(getattr(report, "lost_rows", ()) or ())
+        if not rows:
+            raise RecoveryAbort("report names no lost rows")
+        resume = self.elastic(state, report, step)
+        self.pending_remesh = resume
+        self.step_fn = resume.step
+        self.batch_fn = resume.bfn
+        self.shardings = resume.shardings
+        if resume.canary is not None:
+            self.canary = resume.canary
+        if resume.pstore is not None:
+            self.parity = resume.pstore
+        ev = resume.event
+        self._last_patched_bytes = ev.bytes_reconstructed
+        return resume.state, (
+            f"remeshed dp {ev.old_dp}->{ev.new_dp} (rows {ev.lost_rows} "
+            f"lost), {ev.blocks_reconstructed} blocks "
+            f"({ev.bytes_reconstructed} B) parity-reconstructed, "
+            f"{ev.certified_blocks} survivor blocks certified, "
+            f"re-lowered once in {ev.relower_seconds:.2f}s")
+
     _RUNGS = {
         RUNG_TRIAGE: _rung_triage,
         RUNG_EQ1: _rung_eq1,
@@ -705,6 +747,7 @@ class RecoveryRuntime:
         RUNG_REPLICA: _rung_replica,
         RUNG_PARITY: _rung_parity,
         RUNG_REPLAY: _rung_replay,
+        RUNG_REMESH: _rung_remesh,
         RUNG_CHECKPOINT: _rung_checkpoint,
     }
 
@@ -765,6 +808,13 @@ class RecoveryRuntime:
 
     def _ladder(self, report: FaultReport) -> List[str]:
         """Choose the ladder from the Recovery Table (or the default)."""
+        if getattr(report, "lost_rows", None):
+            # HARD loss: the devices themselves are gone — no in-place
+            # rung applies (there is nothing to patch into), no replay
+            # helps (snapshots are sharded onto the dead mesh).  Remesh
+            # onto the survivors; only the classic checkpoint restore
+            # sits below it.
+            return [RUNG_REMESH, RUNG_CHECKPOINT]
         if self.donated:
             # the pre-step state was donated into the step — there are no
             # live buffers for the in-place rungs (Eq.(1), TMR, parity,

@@ -29,6 +29,7 @@ RUNG_SHARD = "shard_patch"       # restore only the injured shard's bytes
 RUNG_REPLICA = "replica_vote"    # TMR vote across DP replicas
 RUNG_PARITY = "parity_xor"       # XOR parity reconstruction
 RUNG_REPLAY = "replay"           # pure-step replay from snapshot
+RUNG_REMESH = "remesh"           # hard loss: shrink the mesh, keep training
 RUNG_CHECKPOINT = "checkpoint"   # classic restore (last resort)
 
 
@@ -48,7 +49,7 @@ class RecoveryTable:
     @classmethod
     def build(cls, state, *, replicated: bool = False,
               parity: bool = False, sharded: bool = False,
-              triage: bool = False,
+              triage: bool = False, elastic: bool = False,
               opt_ivs: Tuple[str, ...] = ()) -> "RecoveryTable":
         """Construct the table for a train state.
 
@@ -68,6 +69,15 @@ class RecoveryTable:
                     shard_patch it self-gates at recovery time (aborts
                     into the rest of the ladder when no certificate
                     holds), so listing it is always safe.
+        elastic:    an ElasticManager is attached (launch/elastic.py) ->
+                    the remesh rung sits between replay and the classic
+                    checkpoint restore in EVERY ladder: any escalation
+                    that would otherwise abort to disk first tries to
+                    shrink the mesh onto the survivors.  The rung
+                    self-gates at recovery time (aborts unless the report
+                    names lost rows), so listing it is always safe; a
+                    hard-loss report short-circuits straight to it via
+                    ``RecoveryRuntime._ladder``.
         opt_ivs:    full paths of optimizer-owned induction leaves
                     (``core.icp.promote`` registry keys under ``opt/``):
                     their ladder leads with the opt_iv branch of the
@@ -78,18 +88,21 @@ class RecoveryTable:
         iv_names = sorted(state.get("iv", {}))
         opt_iv_set = set(opt_ivs)
 
+        tail = (RUNG_REPLAY, RUNG_REMESH, RUNG_CHECKPOINT) if elastic \
+            else (RUNG_REPLAY, RUNG_CHECKPOINT)
+
         def visit(path, leaf):
             key = leaf_key(path)
             arr = np.asarray(leaf)
             if key.startswith("iv/"):
                 partners = tuple(f"iv/{n}" for n in iv_names
                                  if f"iv/{n}" != key)
-                ladder = (RUNG_EQ1, RUNG_REPLAY, RUNG_CHECKPOINT)
+                ladder = (RUNG_EQ1,) + tail
                 params = partners
             elif key in opt_iv_set:
                 partners = tuple(f"iv/{n}" for n in iv_names) + tuple(
                     k for k in sorted(opt_iv_set) if k != key)
-                ladder = (RUNG_OPT_IV, RUNG_REPLAY, RUNG_CHECKPOINT)
+                ladder = (RUNG_OPT_IV,) + tail
                 params = partners
             else:
                 rungs: List[str] = []
@@ -101,7 +114,7 @@ class RecoveryTable:
                     rungs.append(RUNG_REPLICA)
                 if parity:
                     rungs.append(RUNG_PARITY)
-                rungs += [RUNG_REPLAY, RUNG_CHECKPOINT]
+                rungs += list(tail)
                 ladder = tuple(rungs)
                 params = ("snapshot", "iv/step")
             entries[key] = TableEntry(key=key, ladder=ladder, params=params,

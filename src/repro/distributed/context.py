@@ -112,6 +112,47 @@ class DistContext:
         # tensor-parallel width 1
         return self.mesh.shape.get(self.model_axis, 1)
 
+    # -- elastic views (DESIGN.md §7) ----------------------------------------
+
+    @property
+    def data_axis(self) -> str:
+        """The innermost data-parallel axis — the axis whose rows a hard
+        host/board loss removes."""
+        return self.batch_axes[-1] if self.batch_axes else "data"
+
+    def row_devices(self, row: int) -> Tuple:
+        """Devices of data row ``row`` — what dies together when a host
+        holding that row is lost."""
+        if not self.enabled:
+            return ()
+        import numpy as np
+        ai = self.mesh.axis_names.index(self.data_axis)
+        return tuple(np.take(self.mesh.devices, row, axis=ai).flatten())
+
+    def degrade(self, dead_rows) -> "DistContext":
+        """The context after losing ``dead_rows`` of the data axis: the
+        same axis names over the surviving device rows.  Every derived
+        artifact (NamedShardings, digest/parity plans, shard ids) must be
+        rebuilt against the returned context — nothing built on the old
+        mesh is valid on the new one."""
+        if not self.enabled:
+            raise ValueError("cannot degrade a local context")
+        import numpy as np
+        axis = self.data_axis
+        ai = self.mesh.axis_names.index(axis)
+        dead = set(int(r) for r in dead_rows)
+        n = self.mesh.devices.shape[ai]
+        bad = dead - set(range(n))
+        if bad:
+            raise ValueError(f"dead rows {sorted(bad)} outside data axis "
+                             f"of size {n}")
+        keep = [r for r in range(n) if r not in dead]
+        if not keep:
+            raise RuntimeError("no surviving data rows to remesh onto")
+        devices = np.take(self.mesh.devices, keep, axis=ai)
+        return DistContext.for_mesh(Mesh(devices, self.mesh.axis_names),
+                                    fsdp=self.fsdp)
+
     # -- resilience-layer views ---------------------------------------------
 
     @property

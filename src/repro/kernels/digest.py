@@ -565,6 +565,30 @@ def _mesh_key(mesh: Mesh):
             tuple(d.id for d in mesh.devices.flatten()))
 
 
+def key_on_mesh(cache_key, mesh_key) -> bool:
+    """True when any element of a cache key (plan, NamedSharding, ...)
+    carries a ``.mesh`` matching ``mesh_key`` — the shared predicate of
+    every module's ``evict_mesh`` (elastic hard loss: executables and
+    plans pinned to a dead mesh must be dropped, both to release their
+    buffers and so a later drill in the same process cannot hit a
+    stale-device executable)."""
+    elems = cache_key if isinstance(cache_key, tuple) else (cache_key,)
+    for el in elems:
+        m = getattr(el, "mesh", None)
+        if isinstance(m, Mesh) and _mesh_key(m) == mesh_key:
+            return True
+    return False
+
+
+def evict_mesh_plans(mesh) -> int:
+    """Drop cached ShardedDigestPlans keyed on ``mesh``."""
+    mk = _mesh_key(mesh)
+    stale = [k for k in _SHARDED_PLAN_CACHE if k[0] == mk]
+    for k in stale:
+        del _SHARDED_PLAN_CACHE[k]
+    return len(stale)
+
+
 def sharded_plan_for(tree, mesh: Mesh) -> ShardedDigestPlan:
     """The cached ShardedDigestPlan for ``tree``'s structure on ``mesh``.
 

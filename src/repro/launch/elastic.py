@@ -1,77 +1,418 @@
-"""Elastic scaling + straggler/failure mitigation (DESIGN §7).
+"""Elastic hard-loss recovery — shrink the mesh, keep training (DESIGN §7).
 
-At 1000+-node scale the dominant non-transient failure is a lost host/board:
-a 16-chip row of the data axis disappears.  Classic response: kill the job,
-re-provision, restore from the last disk checkpoint.  IterPro-JAX's response
-(the paper's near-zero-downtime philosophy applied at pod scale):
+At 1000+-node scale the dominant NON-transient failure is a lost
+host/board: a whole row of the data axis disappears and no in-place rung
+(core/recover.py) can help — the hardware holding those shards is gone.
+Classic response: kill the job, re-provision, restore from the last disk
+checkpoint.  The near-zero-downtime response, implemented here end to end:
 
-1. **Deterministic data re-assignment** — every surviving host recomputes the
-   same ``shard_assignment(step, dead)`` locally (no coordinator round):
-   the dead rows' input slices are absorbed by survivors, rotating by step.
-2. **Elastic re-mesh** — ``make_degraded_mesh`` rebuilds a (rows-k, 16) mesh
-   on the survivors; parameters re-shard via ``jax.device_put`` with the new
-   NamedShardings (one all-gather-free reshard — FSDP shards move, replicated
-   leaves stay).  The step function is re-lowered once; training resumes at
-   reduced data-parallel width with the SAME global batch (survivors each
-   carry proportionally more rows).
-3. **State repair** — the lost rows' FSDP/parity shards are reconstructed by
-   the recovery ladder (parity rung) or re-gathered from optimizer-replicated
-   copies; see core/recover.py.
+1. **Deterministic data re-assignment** — every surviving host recomputes
+   the same ``shard_assignment(step, dead)`` locally (no coordinator
+   round): the dead rows' input slices are absorbed by survivors,
+   rotating by step, and the concatenation of the surviving loads is the
+   SAME global batch (``stolen_batch`` below is that identity, asserted
+   by the chaos drill).
+2. **Survivor-honest state reconstruction** — every leaf is reassembled
+   on the host from SURVIVING device shards only (dead devices still
+   answer in a single-process simulation, so every read filters the dead
+   set explicitly).  Blocks with no surviving replica are reconstructed
+   from the row-safe XOR parity (``core/parity.py``: parity sharded over
+   the non-batch axes survives any data-row loss; per-group folds make a
+   row loss a single erasure per group).  Surviving blocks are certified
+   against the canary's surviving reference-table rows — the dead rows'
+   digests died with their devices and are never read.
+3. **Elastic re-mesh** — ``DistContext.degrade`` derives the shrunken
+   context, every executable/plan cached against the dead mesh is
+   evicted (``invalidate_mesh_caches`` — both to release buffers and so
+   a second drill in-process can never hit a stale-device executable),
+   and ``launch/specs.bind_state`` re-runs THE one binding recipe against
+   the degraded context: device_put onto the new NamedShardings, re-pin,
+   re-lower exactly once (AOT ``lower().compile()`` — the returned step
+   can never retrace).  Fresh canary + parity artifacts are built on the
+   shrunken context and training resumes at reduced DP width.
 
-The dry-run proof: ``relower_degraded`` compiles the identical step function
-against the degraded mesh — demonstrating the re-mesh path is executable
-without code changes.
+Total downtime = reconstruct (O(lost bytes)) + one re-lower — no disk
+restore, no replay, no replacement hardware.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.data.pipeline import shard_assignment
 from repro.distributed.context import DistContext
+from repro.kernels import digest as kdigest
+from repro.kernels.ops import leaf_key
 from repro.launch.mesh import make_degraded_mesh, mesh_chip_count
 from repro.launch.specs import input_specs
 
 
+# ---------------------------------------------------------------------------
+# events / resume bundle
+# ---------------------------------------------------------------------------
+
 @dataclass
 class ElasticEvent:
+    """Telemetry of one hard-loss remesh (benchmarks/elastic_drill.py
+    reports these; the drill asserts ``disk_restores == 0``)."""
     step: int
-    lost_slices: Tuple[int, ...]
-    new_dp_width: int
-    relower_seconds: float
+    lost_rows: Tuple[int, ...] = ()       # row indices in the ctx at loss
+    lost_slices: Tuple[int, ...] = ()     # original data-slice ids
+    old_dp: int = 0
+    new_dp: int = 0
+    new_dp_width: int = 0                 # legacy alias of new_dp
+    downtime_seconds: float = 0.0
+    reconstruct_seconds: float = 0.0
+    relower_seconds: float = 0.0
+    bytes_reconstructed: int = 0
+    bytes_regathered: int = 0
+    blocks_reconstructed: int = 0
+    leaves_regathered: int = 0
+    certified_blocks: int = 0
+    uncertified_blocks: int = 0
+    evicted_executables: int = 0
+    disk_restores: int = 0
 
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+@dataclass
+class ElasticResume:
+    """Everything the training loop swaps in after a remesh."""
+    ctx: DistContext
+    state: object
+    step: Callable          # AOT-compiled pinned step (cannot retrace)
+    raw_step: Callable      # the pinned, unjitted step (replay / rebinds)
+    bfn: Callable
+    shardings: object
+    specs: object
+    canary: object = None
+    pstore: object = None
+    event: ElasticEvent = field(default_factory=lambda: ElasticEvent(0))
+
+
+# ---------------------------------------------------------------------------
+# survivor-honest host reads
+# ---------------------------------------------------------------------------
+
+def _host_regather(leaf, dead):
+    """Full host copy of a leaf assembled from SURVIVING device shards
+    only.  Returns None when some region has no surviving replica (the
+    caller must then have parity coverage or fail loudly)."""
+    out = np.zeros(leaf.shape, leaf.dtype)
+    have = np.zeros(leaf.shape, bool)
+    for sh in leaf.addressable_shards:
+        if sh.device in dead:
+            continue
+        out[sh.index] = np.asarray(sh.data)
+        have[sh.index] = True
+    if not bool(have.all()):
+        return None
+    return out
+
+
+def _certify_leaf(key, full, leaf, refs, have, dead, mesh):
+    """Certify the surviving unique blocks of ``full`` (our host
+    assembly) against the canary's SURVIVING reference rows: the digest
+    of each block must equal the table row of a surviving device holding
+    it (``host_checksum`` is bit-identical to the sharded table's rows by
+    construction).  Returns (certified, mismatched) block counts —
+    mismatches mean the row was armed for an older state version (K > 1
+    rotation) or the survivor itself is corrupt."""
+    from repro.core.parity import _norm_slices
+    ref = refs.get(key)
+    if ref is None:
+        return 0, 0
+    devs = kdigest.mesh_device_order(mesh)
+    idxs = [_norm_slices(i, full.shape) for i in kdigest.shard_indices(leaf)]
+    ok = bad = 0
+    seen = set()
+    for d, (dev, idx) in enumerate(zip(devs, idxs)):
+        if dev in dead or not have[d] or idx in seen:
+            continue
+        seen.add(idx)
+        block = full[tuple(slice(a, b) for a, b in idx)]
+        got = np.asarray(kdigest.host_checksum(block))
+        if np.array_equal(got, np.asarray(ref[d])):
+            ok += 1
+        else:
+            bad += 1
+    return ok, bad
+
+
+def stolen_batch(pipe, step: int, n_slices: int,
+                 dead: Tuple[int, ...]) -> Dict[str, jnp.ndarray]:
+    """The global batch as the SURVIVORS assemble it: every surviving
+    slice loads its own rows plus the dead slices' rows its
+    ``shard_assignment`` hands it, and the pieces concatenate back in
+    canonical slice order — bit-identical to ``pipe.batch_at(step)``
+    (the chaos drill asserts this identity; it is what 'same global
+    batch at reduced DP width' means)."""
+    assign = shard_assignment(step, n_slices, tuple(dead))
+    parts: Dict[int, Dict[str, jnp.ndarray]] = {}
+    for owner, slices in assign.items():
+        for sl in slices:
+            parts[sl] = pipe.shard_at(step, sl, n_slices)
+    return {k: jnp.concatenate([parts[i][k] for i in range(n_slices)],
+                               axis=0)
+            for k in parts[0]}
+
+
+# ---------------------------------------------------------------------------
+# mesh-keyed cache eviction (the stale-executable guard)
+# ---------------------------------------------------------------------------
+
+def invalidate_mesh_caches(mesh) -> Dict[str, int]:
+    """Evict every global cache entry keyed on ``mesh``: fused-step and
+    fused-canary executables, serving-engine executables, and the
+    digest/parity plan caches.  Executables pin their device assignment
+    at compile time — after a hard loss they reference dead devices, hold
+    device buffers alive, and a second drill in the same process would
+    silently hit them."""
+    from repro.core import detect, fused_step
+    from repro.core import parity as core_parity
+    counts = {
+        "fused_step": fused_step.evict_mesh(mesh),
+        "fused_canary": detect.evict_mesh(mesh),
+        "digest_plans": kdigest.evict_mesh_plans(mesh),
+        "parity_plans": core_parity.evict_mesh_plans(mesh),
+    }
+    try:
+        from repro.serving import engine as serving_engine
+        counts["serving"] = serving_engine.evict_mesh(mesh)
+    except ImportError:                        # pragma: no cover
+        counts["serving"] = 0
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# the manager
+# ---------------------------------------------------------------------------
 
 class ElasticManager:
-    """Tracks dead data slices and produces degraded meshes/assignments."""
+    """Tracks dead data slices and runs the hard-loss recovery path.
 
-    def __init__(self, n_slices: int):
-        self.n_slices = n_slices
+    Two construction modes:
+
+    * ``ElasticManager(n_slices=8)`` — assignment-only (the original
+      dry-run API): ``mark_dead`` + ``assignment`` + ``degraded_mesh``.
+    * ``ElasticManager(ctx)`` — live mode over a meshed ``DistContext``:
+      ``on_loss`` executes reconstruction + remesh + re-lower and returns
+      an ``ElasticResume``.  The manager's ``ctx`` advances to the
+      degraded context after each loss, so a second loss composes
+      (``slice_ids`` keeps the surviving rows' ORIGINAL slice ids for
+      ``shard_assignment``).
+    """
+
+    def __init__(self, ctx: Optional[DistContext] = None, *,
+                 n_slices: Optional[int] = None, verbose: bool = False):
+        if ctx is not None and not isinstance(ctx, DistContext):
+            raise TypeError("pass a DistContext or n_slices=...")
+        self.ctx = ctx if (ctx is not None and ctx.enabled) else None
+        if n_slices is None:
+            n_slices = self.ctx.mesh.shape[self.ctx.data_axis] \
+                if self.ctx else 0
+        self.n_slices = int(n_slices)
+        self.verbose = verbose
+        #: dead ORIGINAL data-slice ids — the coordinate system of
+        #: ``shard_assignment`` (stable across successive remeshes)
         self.dead: set = set()
+        #: current-ctx row index -> original slice id
+        self.slice_ids = list(range(self.n_slices))
         self.events: list = []
 
+    # -- assignment (original API) ----------------------------------------
+
+    @property
+    def dead_rows(self) -> set:
+        return self.dead
+
     def mark_dead(self, *slices: int) -> None:
-        self.dead.update(slices)
+        self.dead.update(int(s) for s in slices)
         if len(self.dead) >= self.n_slices:
             raise RuntimeError("all data slices lost")
+        self.slice_ids = [s for s in self.slice_ids if s not in self.dead]
 
     def assignment(self, step: int) -> Dict[int, Tuple[int, ...]]:
         """Which input slices each surviving slice loads this step."""
         return shard_assignment(step, self.n_slices, tuple(self.dead))
 
     def degraded_mesh(self, *, multi_pod: bool = False):
+        if self.ctx is not None:
+            return self.ctx.mesh
         return make_degraded_mesh(len(self.dead), multi_pod=multi_pod)
+
+    def kill_target(self) -> int:
+        """Highest surviving row index of the CURRENT mesh — what a
+        simulated ``--kill-row-at`` takes out."""
+        return len(self.slice_ids) - 1
+
+    # -- the hard-loss path ------------------------------------------------
+
+    def on_loss(self, *, step: int, dead_rows: Sequence[int], state,
+                raw_step: Callable, cfg, batch_fn: Callable,
+                canary=None, pstore=None, donate: bool = False,
+                strict_certify: Optional[bool] = None) -> ElasticResume:
+        """Execute the full degraded-mesh resume: survivor-honest gather
+        + certify, parity reconstruction of the dead rows' shards,
+        old-mesh cache eviction, re-bind + ONE re-lower on the degraded
+        context, fresh canary/parity artifacts.  ``dead_rows`` are row
+        indices of the CURRENT context's data axis."""
+        if self.ctx is None:
+            raise RuntimeError("on_loss needs a meshed DistContext")
+        t0 = time.perf_counter()
+        ctx = self.ctx
+        dead_rows = tuple(sorted(int(r) for r in dead_rows))
+        dead = set()
+        for r in dead_rows:
+            dead.update(ctx.row_devices(r))
+        if strict_certify is None:
+            strict_certify = canary is not None and canary.n_slices == 1
+
+        plan = pstore.plan if pstore is not None else None
+        if plan is not None and not plan.keys:
+            plan = None  # empty coverage: pure re-gather path
+        if plan is not None and not plan.row_safe:
+            raise RuntimeError(
+                "hard-loss recovery needs a row_safe ParityStore — the "
+                "default parity placement dies with the row it covers")
+        refs = have = None
+        if canary is not None:
+            refs, have = canary.surviving_reference_digests(dead)
+        pflat = plan.host_parity_flat(pstore.parity, dead) \
+            if plan is not None else None
+
+        # ---- survivor-honest gather + certify + reconstruct ------------
+        bytes_recon = bytes_regather = 0
+        blocks_recon = leaves_regathered = 0
+        certified = uncertified = 0
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        host_leaves = []
+        for path, leaf in flat:
+            key = leaf_key(path)
+            if plan is not None and key in plan.key_set:
+                full, missing = plan.host_assemble_leaf(key, leaf, dead)
+                if missing:
+                    blocks = plan.host_surviving_blocks(key, leaf, dead)
+                    uniq, _ = plan.slices[key]
+                    for b in missing:
+                        blk = plan.host_reconstruct_block(
+                            key, b, pflat, blocks)
+                        full[tuple(slice(a, bnd)
+                                   for a, bnd in uniq[b])] = blk
+                        bytes_recon += blk.nbytes
+                        blocks_recon += 1
+            else:
+                full = _host_regather(leaf, dead)
+                if full is None:
+                    raise RuntimeError(
+                        f"leaf {key}: some region has neither a "
+                        f"surviving replica nor parity coverage — "
+                        f"unrecoverable without a checkpoint")
+                bytes_regather += full.nbytes
+                leaves_regathered += 1
+            if refs is not None:
+                ok, bad = _certify_leaf(key, full, leaf, refs, have,
+                                        dead, ctx.mesh)
+                certified += ok
+                uncertified += bad
+            host_leaves.append(full)
+        if strict_certify and uncertified:
+            raise RuntimeError(
+                f"{uncertified} surviving blocks failed digest "
+                f"certification against the surviving reference rows")
+        host_state = jax.tree_util.tree_unflatten(treedef, host_leaves)
+        t_recon = time.perf_counter() - t0
+
+        # ---- drop everything pinned to the dead mesh --------------------
+        evicted = invalidate_mesh_caches(ctx.mesh)
+
+        # ---- remesh + re-bind + ONE re-lower ----------------------------
+        lost_slices = tuple(self.slice_ids[r] for r in dead_rows
+                            if r < len(self.slice_ids))
+        old_dp = ctx.dp_size
+        new_ctx = ctx.degrade(dead_rows)
+        from repro.launch.specs import bind_state
+        t1 = time.perf_counter()
+        bound = bind_state(new_ctx, cfg, host_state, raw_step, batch_fn)
+        jfn = jax.jit(bound.step,
+                      donate_argnums=(0,) if donate else ())
+        compiled = jfn.lower(bound.state, bound.bfn(step)).compile()
+        relower = time.perf_counter() - t1
+
+        # ---- fresh detection/parity artifacts on the shrunken ctx -------
+        new_canary = new_pstore = None
+        if pstore is not None:
+            from repro.core.parity import ParityStore
+            new_pstore = ParityStore(bound.state, ctx=new_ctx,
+                                     row_safe=True)
+            new_pstore.build(bound.state, step)
+        if canary is not None:
+            from repro.core.detect import ChecksumCanary
+            new_canary = ChecksumCanary(
+                bound.state, n_slices=canary.n_slices, ctx=new_ctx)
+            if new_pstore is not None and canary.parity_store is not None:
+                new_canary.attach_parity(new_pstore)
+
+        self.dead.update(lost_slices)
+        self.slice_ids = [s for i, s in enumerate(self.slice_ids)
+                          if i not in set(dead_rows)]
+        self.ctx = new_ctx
+        ev = ElasticEvent(
+            step=step, lost_rows=dead_rows, lost_slices=lost_slices,
+            old_dp=old_dp, new_dp=new_ctx.dp_size,
+            new_dp_width=new_ctx.dp_size,
+            downtime_seconds=time.perf_counter() - t0,
+            reconstruct_seconds=t_recon, relower_seconds=relower,
+            bytes_reconstructed=bytes_recon,
+            bytes_regathered=bytes_regather,
+            blocks_reconstructed=blocks_recon,
+            leaves_regathered=leaves_regathered,
+            certified_blocks=certified, uncertified_blocks=uncertified,
+            evicted_executables=sum(evicted.values()),
+            disk_restores=0)
+        self.events.append(ev)
+        if self.verbose:
+            print(f"[elastic] step {step}: lost rows {dead_rows} "
+                  f"(slices {lost_slices}), dp {old_dp}->{ev.new_dp}, "
+                  f"reconstructed {blocks_recon} blocks "
+                  f"({bytes_recon} B), re-lowered in {relower:.2f}s, "
+                  f"downtime {ev.downtime_seconds:.2f}s")
+        return ElasticResume(
+            ctx=new_ctx, state=bound.state, step=compiled,
+            raw_step=bound.step, bfn=bound.bfn,
+            shardings=bound.shardings, specs=bound.specs,
+            canary=new_canary, pstore=new_pstore, event=ev)
+
+    def hook(self, *, raw_step, cfg, batch_fn, canary=None, pstore=None,
+             donate: bool = False) -> Callable:
+        """Adapter for ``RecoveryRuntime(elastic=...)``: a callable
+        ``(state, report, step) -> ElasticResume`` closing over the bind
+        ingredients (the runtime stays layering-clean: core/ never
+        imports launch/)."""
+        def run(state, report, step):
+            return self.on_loss(
+                step=step, dead_rows=tuple(report.lost_rows),
+                state=state, raw_step=raw_step, cfg=cfg,
+                batch_fn=batch_fn, canary=canary, pstore=pstore,
+                donate=donate)
+        return run
 
 
 def relower_degraded(cfg, shape, *, lost_slices: int = 1,
                      multi_pod: bool = False):
     """Re-lower + compile the cell's program on the degraded mesh.
 
-    Returns (compiled, mesh, seconds) — the elastic-scaling dry-run proof.
-    """
+    Returns (compiled, mesh, seconds) — the elastic-scaling dry-run proof
+    (the production-shape twin of the live ``on_loss`` path, runnable
+    with 512 placeholder devices and no state)."""
     t0 = time.perf_counter()
     mesh = make_degraded_mesh(lost_slices, multi_pod=multi_pod)
     ctx = DistContext.for_mesh(mesh, fsdp=cfg.sharding.fsdp)

@@ -57,16 +57,35 @@ def make_context(mesh_spec: Optional[str]):
     return DistContext.for_mesh(make_mesh(shape, axes))
 
 
-def make_degraded_mesh(lost_data_slices: int = 1, *, multi_pod: bool = False):
-    """Elastic re-mesh after losing ``lost_data_slices`` rows of the data
-    axis (a failed host/board takes out a 16-chip model row).  The job
-    continues at reduced data-parallel width on the surviving devices —
-    no replacement hardware required."""
+def make_degraded_mesh(lost_data_slices: int = 1, *, multi_pod: bool = False,
+                       base=None, dead=None):
+    """Elastic re-mesh after losing rows of the data axis (a failed
+    host/board takes out a whole model row).  The job continues at
+    reduced data-parallel width on the surviving devices — no replacement
+    hardware required.
+
+    With ``base`` (a live Mesh), the degraded mesh is the SAME axis names
+    over the base's device array with the dead data rows deleted —
+    ``dead`` gives explicit row indices (default: the trailing
+    ``lost_data_slices`` rows).  Without ``base``, the original
+    production-shape path: a fresh (16-lost)x16 (or 31x16 multi-pod)
+    mesh over the leading devices."""
+    from jax.sharding import Mesh
+    if base is not None:
+        names = base.axis_names
+        axis = "data" if "data" in names else names[0]
+        ai = names.index(axis)
+        n = base.devices.shape[ai]
+        rows_dead = set(int(r) for r in dead) if dead is not None else \
+            set(range(n - lost_data_slices, n))
+        keep = [r for r in range(n) if r not in rows_dead]
+        if not keep:
+            raise ValueError("no data slices left")
+        return Mesh(np.take(base.devices, keep, axis=ai), names)
     rows = (32 if multi_pod else 16) - lost_data_slices
     if rows < 1:
         raise ValueError("no data slices left")
     devices = np.asarray(jax.devices()[: rows * 16]).reshape(rows, 16)
-    from jax.sharding import Mesh
     return Mesh(devices, ("data", "model"))
 
 

@@ -120,6 +120,75 @@ def cache_shardings(ctx: DistContext, cache_st):
 
 
 # ---------------------------------------------------------------------------
+# bind_state — the one mesh-binding recipe
+# ---------------------------------------------------------------------------
+
+class BoundState:
+    """What ``bind_state`` hands back: the placed state, the layout-pinned
+    (still unjitted) step, the device-placing batch fn, and the sharding
+    trees.  Iterable as ``state, step, bfn, shardings = bound`` for the
+    common call sites."""
+
+    __slots__ = ("state", "step", "bfn", "shardings", "specs",
+                 "batch_shardings")
+
+    def __init__(self, state, step, bfn, shardings, specs, batch_sh):
+        self.state = state
+        self.step = step
+        self.bfn = bfn
+        self.shardings = shardings
+        self.specs = specs
+        self.batch_shardings = batch_sh
+
+    def __iter__(self):
+        return iter((self.state, self.step, self.bfn, self.shardings))
+
+    def pin(self, fn):
+        """Pin another step-shaped fn to the same state layout (identity
+        off-mesh) — e.g. a donated variant of the bound step."""
+        if self.shardings is None:
+            return fn
+        from repro.train.loop import pin_state_shardings
+        return pin_state_shardings(fn, self.shardings)
+
+
+def bind_state(ctx: Optional[DistContext], cfg: ArchConfig, state,
+               raw_step: Callable, batch_fn: Callable, *,
+               example_batch=None) -> BoundState:
+    """THE mesh-binding recipe, in one place (previously copy-pasted
+    through train/campaign/overhead/examples/tests — forgetting any line
+    silently loses the layout pin and with it the zero-resharding
+    guarantee):
+
+      1. derive the state's NamedShardings (``state_shardings``),
+      2. ``device_put`` the state onto them,
+      3. pin the step to that layout (``pin_state_shardings`` — output
+         shardings declared so recovery device_puts can't drift),
+      4. wrap ``batch_fn`` to place each batch on its batch shardings.
+
+    Off-mesh (``ctx`` None or local) everything passes through untouched.
+    The elastic remesh path calls this against the degraded context — the
+    SAME recipe re-lowers the survivor state, which is the point of
+    having it be one function.  An already-pinned step is unwrapped
+    first, so re-binding onto a new mesh never stacks a stale layout
+    constraint under the fresh one."""
+    if ctx is None or not getattr(ctx, "enabled", False):
+        return BoundState(state, raw_step, batch_fn, None, None, None)
+    from repro.train.loop import pin_state_shardings
+    raw_step = getattr(raw_step, "unpinned_step", raw_step)
+    shardings, specs = state_shardings(ctx, cfg, state)
+    state = jax.device_put(state, shardings)
+    pinned = pin_state_shardings(raw_step, shardings)
+    ex = example_batch if example_batch is not None else batch_fn(0)
+    bsh, _ = batch_shardings(ctx, ex)
+
+    def bfn(s):
+        return jax.device_put(batch_fn(s), bsh)
+
+    return BoundState(state, pinned, bfn, shardings, specs, bsh)
+
+
+# ---------------------------------------------------------------------------
 # the public entry: one call per dry-run cell
 # ---------------------------------------------------------------------------
 

@@ -48,10 +48,10 @@ from repro.core import (
 from repro.core.detect import LOSS_WINDOW
 from repro.data.pipeline import TokenPipeline
 from repro.launch.mesh import make_context
+from repro.launch.specs import bind_state
 from repro.train.loop import (
     make_train_state,
     make_train_step,
-    pin_state_shardings,
 )
 
 
@@ -64,9 +64,10 @@ class LoopReport:
     losses: List[float] = field(default_factory=list)
     recovery_ms: List[float] = field(default_factory=list)
     step_seconds: List[float] = field(default_factory=list)
+    elastic_events: List[Dict] = field(default_factory=list)
 
     def summary(self) -> Dict:
-        return {
+        out = {
             "steps": self.steps,
             "final_loss": self.losses[-1] if self.losses else None,
             "faults_injected": self.faults_injected,
@@ -77,6 +78,9 @@ class LoopReport:
             "mean_step_ms": 1e3 * float(np.mean(self.step_seconds))
             if self.step_seconds else 0.0,
         }
+        if self.elastic_events:
+            out["elastic_events"] = list(self.elastic_events)
+        return out
 
 
 def batch_for(cfg, pipe, step):
@@ -97,6 +101,7 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           donate: bool = False, fused_detect: bool = False,
           fused_warm: str = "eager", mesh: Optional[str] = None,
           parity: bool = False, triage: bool = False,
+          elastic: bool = False, kill_row_at: Optional[int] = None,
           verbose: bool = True) -> Dict:
     """Run the recovery-wrapped loop; returns the loop report dict.
 
@@ -150,6 +155,20 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     zero replayed steps.  Strictly fault-path-only: the steady state
     keeps the same 1-launch/1-sync/0-retrace contract (asserted by
     ``benchmarks/overhead.py``).  Requires ``detectors=True``.
+
+    ``elastic=True`` (requires ``mesh`` + ``parity`` + ``detectors``)
+    arms the HARD-loss path (launch/elastic.py; DESIGN.md §7): the parity
+    buffer moves to row-safe placement (sharded over the non-batch mesh
+    axes only, so losing a data row never loses the parity that covers
+    it), and a ``FaultReport`` carrying ``lost_rows`` routes recovery to
+    the ``remesh`` rung — the dead rows' FSDP shards are rebuilt from
+    surviving peers + parity, digest-certified against the canary's
+    surviving reference rows, the step is re-lowered ONCE onto the
+    shrunken mesh, and training resumes at reduced DP width with the
+    SAME global batch.  ``kill_row_at=N`` is the chaos drill: before
+    step N the loop synthesises an external hard-loss report for the
+    highest surviving data row (no process actually dies — the "dead"
+    devices are simply never read again).
     """
     key = jax.random.PRNGKey(seed)
     pipe = TokenPipeline(cfg.model.vocab_size, seq_len, global_batch,
@@ -157,19 +176,12 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     ctx = make_context(mesh)
     state = make_train_state(cfg, key, global_batch=global_batch)
     raw_step = make_train_step(cfg, global_batch=global_batch)
-    shardings = None
-    if ctx is not None:
-        from repro.launch.specs import batch_shardings, state_shardings
-        shardings, _ = state_shardings(ctx, cfg, state)
-        state = jax.device_put(state, shardings)
-        # pin the output layout to the input layout: keeps the state's
-        # sharding a per-step invariant (donation-compatible, no drift
-        # under the canary's digest plan)
-        raw_step = pin_state_shardings(raw_step, shardings)
-        bsh, _ = batch_shardings(ctx, batch_for(cfg, pipe, 0))
-        bfn = lambda s: jax.device_put(batch_for(cfg, pipe, s), bsh)
-    else:
-        bfn = lambda s: batch_for(cfg, pipe, s)
+    raw_bfn = lambda s: batch_for(cfg, pipe, s)
+    # THE mesh-binding recipe (shardings + device_put + layout pin +
+    # batch placement) lives in launch/specs.bind_state — the elastic
+    # remesh path re-runs the SAME recipe against the degraded context
+    state, raw_step, bfn, shardings = bind_state(
+        ctx, cfg, state, raw_step, raw_bfn)
     step_fn = jax.jit(raw_step, donate_argnums=(0,) if donate else ())
 
     micro = MicroCheckpointer(interval=snapshot_interval, ctx=ctx)
@@ -184,17 +196,37 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             raise ValueError("parity requires detectors=True (parity "
                              "maintenance rides the canary's launches and "
                              "reconstruction certifies against its digests)")
-        pstore = ParityStore(state, ctx=ctx)
+        # elastic hard loss needs row-safe parity placement: the buffer
+        # lives on the non-batch mesh axes so a dead data row never takes
+        # the parity covering its own shards down with it
+        pstore = ParityStore(state, ctx=ctx, row_safe=elastic)
         pstore.build(state)
         canary.attach_parity(pstore)
     if triage and canary is None:
         raise ValueError("triage requires detectors=True (rung 0 "
                          "classifies against the canary's digest pair)")
+    emgr = None
+    elastic_hook = None
+    if elastic:
+        if ctx is None:
+            raise ValueError("elastic requires mesh='dp,tp' (a hard loss "
+                             "shrinks the data axis of a device mesh)")
+        if pstore is None:
+            raise ValueError("elastic requires parity=True (dead rows' "
+                             "shards are rebuilt from the XOR parity)")
+        from repro.launch.elastic import ElasticManager
+        emgr = ElasticManager(ctx, verbose=verbose)
+        elastic_hook = emgr.hook(raw_step=raw_step, cfg=cfg,
+                                 batch_fn=raw_bfn, canary=canary,
+                                 pstore=pstore, donate=donate)
+    if kill_row_at is not None and emgr is None:
+        raise ValueError("kill_row_at requires elastic=True")
     runtime = RecoveryRuntime(
         step_fn=step_fn,
         batch_fn=bfn, iv_registry=promote(cfg, global_batch), micro=micro,
         parity=pstore, checkpoint=ckpt.loader(state) if ckpt else None,
-        donated=donate, shardings=shardings, canary=canary, triage=triage)
+        donated=donate, shardings=shardings, canary=canary, triage=triage,
+        elastic=elastic_hook)
     fused = None
     if fused_detect:
         if canary is None:
@@ -240,7 +272,17 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             last_inject = s
 
         report = None
-        if donate and canary is not None and fused is None:
+        if emgr is not None and kill_row_at is not None \
+                and s == kill_row_at and not emgr.dead:
+            # chaos drill: the highest surviving data row "dies" here —
+            # an external hard-loss report routes straight to the remesh
+            # rung; the dead devices are never read again
+            target = emgr.kill_target()
+            report = FaultReport(
+                s, "external", lost_rows=(target,),
+                detail=f"simulated hard loss of data row {target}")
+        if report is None and donate and canary is not None \
+                and fused is None:
             # donated hot path, check half: the step is about to CONSUME
             # the state buffers, so this is their last readable moment —
             # one launch + ONE scalar sync verifies slice s%K against the
@@ -297,12 +339,44 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             state, ev = runtime.recover(state, report, s)
             rep.faults_recovered += 1
             rep.recovery_ms.append(1e3 * (time.perf_counter() - t0))
-            if canary is not None:
-                canary.refresh(state)
-            if pstore is not None:
-                # recovery may have produced a whole new state version
-                # (replay/checkpoint rungs); re-anchor the parity to it
-                pstore.rebuild(state, s)
+            resume = getattr(runtime, "pending_remesh", None)
+            if resume is not None:
+                # hard loss: the remesh rung already rebuilt EVERYTHING
+                # against the degraded mesh — swap the loop's working set
+                # wholesale; canary/parity are freshly armed (no refresh/
+                # rebuild: they'd re-digest what was just certified)
+                runtime.pending_remesh = None
+                ctx = resume.ctx
+                state = resume.state
+                step_fn = resume.step       # AOT-compiled: cannot retrace
+                raw_step = resume.raw_step
+                bfn = resume.bfn
+                shardings = resume.shardings
+                canary = resume.canary
+                pstore = resume.pstore
+                micro = MicroCheckpointer(interval=snapshot_interval,
+                                          ctx=ctx)
+                runtime.micro = micro
+                # re-close the hook over the new artifacts so a SECOND
+                # loss composes (emgr.ctx already advanced)
+                runtime.elastic = emgr.hook(
+                    raw_step=raw_step, cfg=cfg, batch_fn=raw_bfn,
+                    canary=canary, pstore=pstore, donate=donate)
+                if fused is not None:
+                    # the old fused executables were evicted with the old
+                    # mesh; rebuild against the fresh canary
+                    fused = canary.fuse_into_step(raw_step, donate=donate,
+                                                  warm=fused_warm)
+                    if fused_warm == "eager":
+                        fused.warm(state, bfn(s))
+                rep.elastic_events.append(resume.event.to_dict())
+            else:
+                if canary is not None:
+                    canary.refresh(state)
+                if pstore is not None:
+                    # recovery may have produced a whole new state version
+                    # (replay/checkpoint rungs); re-anchor the parity to it
+                    pstore.rebuild(state, s)
             if verbose:
                 print(f"[train] recovered via {ev.rung} in "
                       f"{rep.recovery_ms[-1]:.1f} ms")
@@ -379,6 +453,17 @@ def main():
                          "sub-epsilon moment perturbations) — zero bytes "
                          "moved, zero replay; uncertifiable faults "
                          "escalate unchanged")
+    ap.add_argument("--elastic", action="store_true",
+                    help="arm the hard-loss remesh path (requires --mesh "
+                         "and --parity): row-safe parity placement, and a "
+                         "lost_rows fault report shrinks the data axis, "
+                         "rebuilds the dead rows' shards from parity, "
+                         "re-lowers once and resumes at reduced DP width "
+                         "with the same global batch")
+    ap.add_argument("--kill-row-at", type=int, default=None, metavar="STEP",
+                    help="chaos drill: simulate the hard loss of the "
+                         "highest surviving data row just before STEP "
+                         "(requires --elastic)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -397,7 +482,9 @@ def main():
                 fused_warm=args.fused_warm,
                 mesh=args.mesh,
                 parity=args.parity,
-                triage=args.triage)
+                triage=args.triage,
+                elastic=args.elastic,
+                kill_row_at=args.kill_row_at)
     print(json.dumps(out, indent=1) if args.json else out)
 
 

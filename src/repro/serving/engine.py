@@ -116,6 +116,22 @@ _ADMIT_CACHE: Dict[Tuple, object] = {}
 #: every engine over the same serving shape shares them.
 _PAGED_FN_CACHE: Dict[Tuple, Dict] = {}
 
+
+def evict_mesh(mesh) -> int:
+    """Drop every serving-side executable keyed on ``mesh`` (cache keys
+    carry the replication NamedSharding and/or a sharded digest plan) —
+    the elastic remesh path's stale-executable guard."""
+    from repro.kernels import digest as kdigest
+    mk = kdigest._mesh_key(mesh)
+    n = 0
+    for cache in (_EXEC_CACHE, _PREFILL_CACHE, _ADMIT_CACHE,
+                  _PAGED_FN_CACHE):
+        stale = [k for k in cache if kdigest.key_on_mesh(k, mk)]
+        for k in stale:
+            del cache[k]
+        n += len(stale)
+    return n
+
 _BIT_WIDTH = {"float32": 32, "int32": 32, "uint32": 32,
               "bfloat16": 16, "float16": 16, "int16": 16,
               "int8": 8, "uint8": 8}

@@ -143,13 +143,20 @@ def pin_state_shardings(step_fn: Callable, shardings) -> Callable:
     donation's in-place buffer reuse (donor and output layouts must
     match), and hand the shard-local canary a state whose layout drifts
     from the one its digest plan was built for.  With the pin the state's
-    layout is a per-step invariant."""
+    layout is a per-step invariant.
+
+    The wrapper records its unpinned original (``fn.unpinned_step``) so
+    the elastic remesh path can re-pin the SAME step against a degraded
+    mesh's shardings instead of stacking a stale constraint under the
+    fresh one (``launch/specs.bind_state`` unwraps before pinning)."""
     def fn(state, *args):
         new_state, aux = step_fn(state, *args)
         new_state = jax.tree_util.tree_map(
             jax.lax.with_sharding_constraint, new_state, shardings)
         return new_state, aux
 
+    fn.unpinned_step = getattr(step_fn, "unpinned_step", step_fn)
+    fn.pinned_shardings = shardings
     return fn
 
 

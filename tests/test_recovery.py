@@ -200,11 +200,13 @@ def test_every_emittable_rung_has_a_registered_handler(tiny_setup):
         for parity in (False, True):
             for sharded in (False, True):
                 for triage in (False, True):
-                    table = RecoveryTable.build(
-                        state0, replicated=replicated, parity=parity,
-                        sharded=sharded, triage=triage, opt_ivs=opt_ivs)
-                    for entry in table.entries.values():
-                        emittable.update(entry.ladder)
+                    for elastic in (False, True):
+                        table = RecoveryTable.build(
+                            state0, replicated=replicated, parity=parity,
+                            sharded=sharded, triage=triage,
+                            elastic=elastic, opt_ivs=opt_ivs)
+                        for entry in table.entries.values():
+                            emittable.update(entry.ladder)
     missing = emittable - set(RecoveryRuntime._RUNGS)
     assert not missing, f"rungs with no registered handler: {missing}"
     # ...and no handler is dead weight: the flag space above reaches all

@@ -155,23 +155,17 @@ def mesh_train():
         pytest.skip("needs >= 8 devices")
     from repro.configs import get_config
     from repro.data.pipeline import TokenPipeline
-    from repro.launch.specs import batch_shardings, state_shardings
-    from repro.train.loop import (
-        make_train_state,
-        make_train_step,
-        pin_state_shardings,
-    )
+    from repro.launch.specs import bind_state
+    from repro.train.loop import make_train_state, make_train_step
 
     cfg = get_config("iterpro-100m").smoke()
     ctx = _ctx()
     B, S = 8, 32
     pipe = TokenPipeline(cfg.model.vocab_size, S, B, seed=0)
     state = make_train_state(cfg, jax.random.PRNGKey(0), global_batch=B)
-    sh, _ = state_shardings(ctx, cfg, state)
-    state = jax.device_put(state, sh)
-    raw = pin_state_shardings(make_train_step(cfg, global_batch=B), sh)
-    bsh, _ = batch_shardings(ctx, pipe.batch_at(0))
-    bfn = lambda s: jax.device_put(pipe.batch_at(s), bsh)
+    state, raw, bfn, sh = bind_state(
+        ctx, cfg, state, make_train_step(cfg, global_batch=B),
+        lambda s: pipe.batch_at(s))
     step = jax.jit(raw)
     st, m = step(state, bfn(0))
     jax.block_until_ready(m["loss"])
